@@ -1,0 +1,69 @@
+"""Paper Figure 1: dynamic range vs bit-string length per number format.
+
+Analytic (decode of minpos/maxpos patterns), so this reproduces the paper's
+plot exactly.  Emits benchmarks/results/figure1.csv and asserts the paper's
+qualitative claims (takum range ~constant and huge at every n; posit range
+grows ~4(n-2) octaves; IEEE-derived formats collapse at 8 bits).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.core import posit_np, takum_np
+from repro.core.formats import FORMATS
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def decades(lo, hi):
+    return float(np.log10(hi) - np.log10(lo))
+
+
+def run() -> dict:
+    os.makedirs(RESULTS, exist_ok=True)
+    rows = [("format", "nbits", "minpos", "maxpos", "decades")]
+    for n in range(8, 65):  # codecs assume full 5-bit header (n >= 8)
+        rows.append(
+            ("takum_linear", n, takum_np.minpos(n), takum_np.maxpos(n),
+             decades(takum_np.minpos(n), takum_np.maxpos(n)))
+        )
+        rows.append(
+            ("takum_log", n, takum_np.minpos(n, "log"), takum_np.maxpos(n, "log"),
+             decades(takum_np.minpos(n, "log"), takum_np.maxpos(n, "log")))
+        )
+        rows.append(
+            ("posit_es2", n, posit_np.minpos(n), posit_np.maxpos(n),
+             decades(posit_np.minpos(n), posit_np.maxpos(n)))
+        )
+    for name in ("ofp8_e4m3", "ofp8_e5m2", "float16", "bfloat16", "float32", "float64"):
+        f = FORMATS[name]
+        rows.append((name, f.nbits, f.minpos, f.maxpos, decades(f.minpos, f.maxpos)))
+
+    with open(os.path.join(RESULTS, "figure1.csv"), "w") as fh:
+        for r in rows:
+            fh.write(",".join(str(x) for x in r) + "\n")
+
+    # paper claims (Fig. 1): takum range nearly constant from n=8 up
+    t8 = decades(takum_np.minpos(8), takum_np.maxpos(8))
+    t16 = decades(takum_np.minpos(16), takum_np.maxpos(16))
+    t64 = decades(takum_np.minpos(64), takum_np.maxpos(64))
+    assert t8 > 140 and abs(t16 - t64) < 14, (t8, t16, t64)
+    p8 = decades(posit_np.minpos(8), posit_np.maxpos(8))
+    assert p8 < t8 / 4
+    return {"takum8_decades": t8, "takum16_decades": t16, "posit8_decades": p8,
+            "e4m3_decades": decades(FORMATS["ofp8_e4m3"].minpos, FORMATS["ofp8_e4m3"].maxpos)}
+
+
+def main():
+    t0 = time.perf_counter()
+    out = run()
+    us = (time.perf_counter() - t0) * 1e6
+    print(f"figure1_dynamic_range,{us:.0f},{out}")
+
+
+if __name__ == "__main__":
+    main()

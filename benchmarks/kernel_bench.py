@@ -1,0 +1,75 @@
+"""Kernel microbenches: takum codec / dequant-matmul / decode-attention.
+
+On this CPU container the Pallas kernels execute in interpret mode, so wall
+times measure the *reference semantics*, not TPU performance; the TPU-relevant
+output is the analytic HBM-traffic model per format (the roofline memory-term
+input) plus jitted-jnp codec throughput as a sanity floor.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.takum import takum_decode, takum_encode
+from repro.kernels import ref
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def _time(f, *args, reps=5):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(f(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def hbm_model(rows: int, cols: int) -> list[str]:
+    """Bytes to stream a [rows, cols] weight/KV tile per format (the paper's
+    memory-wall argument quantified for the VDPPT dequant path)."""
+    out = []
+    for fmt, bpe in [("f32", 4), ("bf16", 2), ("takum16", 2), ("takum8", 1)]:
+        out.append(f"{fmt}:{rows * cols * bpe / 1e6:.1f}MB")
+    return out
+
+
+def run():
+    os.makedirs(RESULTS, exist_ok=True)
+    rows = []
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((1024, 1024)), jnp.float32)
+    for n in (8, 16):
+        enc = jax.jit(lambda v, n=n: takum_encode(v, n))
+        us = _time(enc, x)
+        rows.append(("codec_encode_jnp", n, us, f"{x.size / (us / 1e6) / 1e6:.0f} Melem/s"))
+        bits = takum_encode(x, n)
+        dec = jax.jit(lambda b, n=n: takum_decode(b, n))
+        us = _time(dec, bits)
+        rows.append(("codec_decode_jnp", n, us, f"{x.size / (us / 1e6) / 1e6:.0f} Melem/s"))
+
+    w8 = takum_encode(jnp.asarray(np.random.default_rng(1).standard_normal((1024, 512)), jnp.float32), 8)
+    mm = jax.jit(lambda a, b: ref.takum_matmul_ref(a, b, 8))
+    us = _time(mm, x, w8)
+    flops = 2 * 1024 * 1024 * 512
+    rows.append(("dequant_matmul_ref", 8, us, f"{flops / (us / 1e6) / 1e9:.1f} GFLOP/s-cpu"))
+
+    rows.append(("hbm_bytes_1024x1024_tile", 0, 0.0, "|".join(hbm_model(1024, 1024))))
+
+    with open(os.path.join(RESULTS, "kernels.csv"), "w") as fh:
+        fh.write("name,n,us_per_call,derived\n")
+        for r in rows:
+            fh.write(",".join(str(v) for v in r) + "\n")
+    return rows
+
+
+def main():
+    for name, n, us, derived in run():
+        print(f"kernel_{name}_{n},{us:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

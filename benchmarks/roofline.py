@@ -1,0 +1,174 @@
+"""Roofline report: three terms per (arch x shape) on the single-pod mesh.
+
+    compute   = FLOPs / (chips * 197e12)           [bf16 peak, v5e]
+    memory    = HBM_bytes / (chips * 819e9)        [HBM bandwidth]
+    collective= wire_bytes / (chips * 50e9)        [per-link ICI, serialised]
+
+Two sources, both reported:
+  * analytic (primary): first-order traffic model from the workload shape,
+    parameter counts and the active quantisation policy — the napkin-math
+    roofline the perf loop iterates on;
+  * HLO (cross-check): ``cost_analysis()`` + collective ops parsed from the
+    compiled dry-run.  XLA:CPU under-counts while-loop bodies (a lax.scan of
+    L layers is costed once), so HLO values are trustworthy only for
+    loop-free segments; the ``useful`` column (MODEL_FLOPS/HLO_FLOPS) makes
+    the discrepancy visible instead of hiding it.
+
+The dominant term and the iteration log live in EXPERIMENTS.md §Roofline/§Perf.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from repro import configs
+from repro.quant.policy import FORMAT_BITS, POLICIES
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+DRYRUN = os.path.join(RESULTS, "dryrun")
+
+PEAK_FLOPS = 197e12  # bf16 / chip (v5e-class)
+HBM_BW = 819e9  # bytes/s / chip
+ICI_BW = 50e9  # bytes/s / link
+CHIPS = 256  # single-pod roofline basis (16 x 16)
+N_DATA, N_MODEL = 16, 16
+
+
+def _policy_bytes(cfg, surface):
+    return FORMAT_BITS[getattr(cfg.quant, surface)] / 8
+
+
+def analytic_terms(arch: str, shape: configs.ShapeSpec, policy: str = "takum",
+                   *, fused_kv: bool = True) -> dict:
+    """``fused_kv``: the Pallas decode kernel streams packed takum KV without
+    an f32 spill; False models the XLA dequant-then-attend reference path."""
+    cfg = configs.get(arch).with_(quant=POLICIES[policy])
+    B, S = shape.batch, shape.seq
+    T = B * S
+    P_tot, P_act = cfg.param_count(), cfg.active_param_count()
+    d, L, V = cfg.d_model, cfg.num_layers, cfg.vocab_size
+    hd = cfg.resolved_head_dim if cfg.num_heads else 0
+    d_attn = (cfg.num_heads or 0) * hd
+    kvb = _policy_bytes(cfg, "kv_cache")
+    ob = _policy_bytes(cfg, "opt_state")
+    act = 2.0  # bf16 activations
+    master = 2.0 if P_tot > 3e11 else 4.0  # bf16 master for 1T-class (DESIGN)
+
+    # attention context flops (causal): 2 ops x (QK^T + AV) x half the square
+    attn_train = 6 * L * d_attn * S * T if cfg.num_heads else 0
+    win = cfg.sliding_window
+    if win and not cfg.alt_local_global:
+        attn_train = 6 * L * d_attn * min(S, win) * T
+
+    if shape.kind == "train":
+        flops = 6.0 * P_act * T + 3 * attn_train  # fwd+bwd(2x) incl. remat fwd
+        hbm = (
+            P_tot * (2 * act + 2 * master + 4 * ob)  # gather bf16 fwd+bwd; m,v r/w
+            + L * T * d * act * 6  # activation stack: write + re-read + remat
+            + T * V * 4 * 2  # logits f32 + softmax bwd
+        )
+        # FSDP all-gather (fwd+bwd) in bf16 + grad reduce-scatter in f32.
+        # NOTE: the GShard-grouped MoE einsum keeps dispatch LOCAL (batch
+        # groups over data x experts over model), so there is no token
+        # all-to-all — confirmed by the dry-run HLO (0 all-to-all bytes on
+        # kimi/dbrx); the trade is duplicated expert-input memory.
+        coll = P_tot * act * 2 + P_tot * 4
+    elif shape.kind == "prefill":
+        wb = 2.0  # serving weights bf16 baseline (takum variants in §Perf)
+        flops = 2.0 * P_act * T + attn_train / 3
+        hbm = P_tot * wb + L * T * d * act * 4 + T * max(cfg.num_kv_heads, 0) * hd * L * 2 * kvb
+        coll = P_tot * wb + (L * T * d * act if cfg.family == "moe" else L * T * act * 2)
+    else:  # decode: one token, full cache read
+        wb = _policy_bytes(cfg, "weights")
+        flops = 2.0 * P_act * B
+        kv_read = L * B * S * max(cfg.num_kv_heads, 0) * hd * 2 * kvb
+        if not fused_kv:
+            # XLA reference path materialises the dequantised cache in f32:
+            # read bits + write f32 + read f32 (HLO-verified on llama3-8b)
+            kv_read = kv_read + 2 * (kv_read / kvb) * 4
+        if cfg.family == "ssm":
+            kv_read = L * B * (cfg.ssm_expand * d // cfg.ssm_head_dim) * cfg.ssm_state * cfg.ssm_head_dim * 4
+        if cfg.family == "hybrid":
+            kv_read += L * B * (d // cfg.ssm_head_dim) * cfg.ssm_state * cfg.ssm_head_dim * 4
+        hbm = P_act * wb + kv_read + B * V * 4
+        coll = 2 * L * B * d * act + B * V * 4  # TP all-reduce per layer + logits
+    return {
+        "flops": flops,
+        "hbm_bytes": hbm,
+        "coll_bytes": coll,
+        "compute_s": flops / (CHIPS * PEAK_FLOPS),
+        "memory_s": hbm / (CHIPS * HBM_BW),
+        "collective_s": coll / (CHIPS * ICI_BW),
+    }
+
+
+def load_cell(arch, shape, pod=1, policy="takum", tag=""):
+    path = os.path.join(DRYRUN, f"{arch}__{shape}__pod{pod}__{policy}{tag}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def cell_row(arch: str, shape_name: str, policy="takum", tag="") -> dict | None:
+    rec = load_cell(arch, shape_name, 1, policy, tag)
+    if rec is None or "error" in rec or "skipped" in rec:
+        return None
+    shape = configs.SHAPES[shape_name]
+    a = analytic_terms(arch, shape, policy)
+    chips = 1
+    for v in rec["mesh"].values():
+        chips *= v
+    hlo_flops = rec["cost"].get("flops", 0.0) * chips
+    hlo_bytes = rec["cost"].get("bytes accessed", 0.0) * chips
+    dom = max(
+        ("compute", a["compute_s"]), ("memory", a["memory_s"]), ("collective", a["collective_s"]),
+        key=lambda kv: kv[1],
+    )
+    return {
+        "arch": arch, "shape": shape_name, "chips": chips,
+        **{k: a[k] for k in ("compute_s", "memory_s", "collective_s")},
+        "dominant": dom[0],
+        "roofline_fraction": a["compute_s"] / max(a["compute_s"], a["memory_s"], a["collective_s"]),
+        "hlo_flops": hlo_flops, "hlo_bytes": hlo_bytes,
+        "hlo_coll_bytes": rec["collectives"]["total_bytes"],
+        "useful_ratio": a["flops"] / hlo_flops if hlo_flops else float("nan"),
+        "temp_gb_per_dev": rec.get("memory", {}).get("temp_size", -1) / 1e9,
+        "compile_s": rec.get("compile_s", -1),
+    }
+
+
+def table(policy="takum", tag="") -> list[dict]:
+    rows = []
+    for arch, shape, ok in configs.cells(include_skipped=True):
+        if not ok:
+            rows.append({"arch": arch, "shape": shape, "skipped": True})
+            continue
+        rows.append(cell_row(arch, shape, policy, tag) or {"arch": arch, "shape": shape, "missing": True})
+    return rows
+
+
+def main():
+    rows = table()
+    done = [r for r in rows if "compute_s" in r]
+    print(f"roofline,0,cells_done={len(done)}/32")
+    print(f"{'arch':<22}{'shape':<13}{'compute':>11}{'memory':>11}{'collect':>11}"
+          f"{'dominant':>11}{'roofline%':>10}{'hlo_x':>7}")
+    for r in rows:
+        if "compute_s" in r:
+            print(
+                f"{r['arch']:<22}{r['shape']:<13}"
+                f"{r['compute_s']:>11.3e}{r['memory_s']:>11.3e}{r['collective_s']:>11.3e}"
+                f"{r['dominant']:>11}{100 * r['roofline_fraction']:>9.0f}%{r['useful_ratio']:>7.1f}"
+            )
+        elif r.get("skipped"):
+            print(f"{r['arch']:<22}{r['shape']:<13}  (skipped: full attention @500k)")
+        else:
+            print(f"{r['arch']:<22}{r['shape']:<13}  (pending)")
+    with open(os.path.join(RESULTS, "roofline.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

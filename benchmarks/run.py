@@ -1,0 +1,47 @@
+"""Benchmark aggregator: one function per paper table/figure + framework
+benches.  Prints ``name,us_per_call,derived`` CSV lines.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    from benchmarks import (
+        collectives_bench,
+        figure1_dynamic_range,
+        figure2_matrix_errors,
+        kernel_bench,
+        roofline,
+        tables_isa,
+    )
+
+    modules = [
+        ("figure1", figure1_dynamic_range),
+        ("tables_isa", tables_isa),
+        ("kernels", kernel_bench),
+        ("collectives", collectives_bench),
+        ("roofline", roofline),
+    ]
+    if not quick:
+        modules.insert(1, ("figure2", figure2_matrix_errors))
+
+    failures = 0
+    for name, mod in modules:
+        try:
+            mod.main()
+        except Exception:
+            failures += 1
+            print(f"{name},0,ERROR")
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

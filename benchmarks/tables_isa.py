@@ -1,0 +1,75 @@
+"""Paper Tables I-V: the AVX10.2 -> takum streamlining, machine-checked.
+
+Prints per-category instruction counts (reconstructed vs paper), the group
+unifications (B01-B03 -> 1, B04-B11 -> 1, F01-F06 -> 1), removed
+format-special-case instructions, and the format-suffix collapse
+(11 IEEE-era suffixes -> T8/T16/T32/T64).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+from repro.core.avx10 import GROUPS, PAPER_COUNTS, by_category, count_report
+from repro.core.streamline import (
+    PROPOSED_GROUPS,
+    REMOVED_SPECIALS,
+    UNIFICATIONS,
+    proposed_by_category,
+    streamline_report,
+)
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def run() -> dict:
+    os.makedirs(RESULTS, exist_ok=True)
+    rep = streamline_report()
+    cr = count_report()
+    lines = []
+    w = lines.append
+    w("=== AVX10.2 instruction census (Tables I-V) ===")
+    w(f"{'category':<10} {'paper':>6} {'reconstructed':>14} {'delta':>6}")
+    for cat in ("bitwise", "mask", "integer", "fp", "crypto", "total"):
+        r = cr[cat]
+        w(f"{cat:<10} {r['paper']:>6} {r['reconstructed']:>14} {r['delta']:>+6}")
+    w("")
+    w("=== group structure ===")
+    w(f"groups before: {rep['groups_before']}   after: {rep['groups_after']}")
+    for pid, srcs in rep["unifications"].items():
+        w(f"  {pid} unifies {'+'.join(srcs)}")
+    w("")
+    w("=== floating-point format suffixes ===")
+    w("before: " + " ".join(rep["fp_formats_before"]))
+    w("after : " + " ".join(rep["fp_formats_after"]))
+    w("")
+    w(f"=== removed format-special instructions ({len(REMOVED_SPECIALS)}) ===")
+    for i in range(0, len(REMOVED_SPECIALS), 6):
+        w("  " + " ".join(REMOVED_SPECIALS[i : i + 6]))
+    w("")
+    w("=== proposed set size (orthogonal op x format matrix) ===")
+    for cat, names in proposed_by_category().items():
+        w(f"  {cat:<10} {len(names):>5}  (was {len(by_category()[cat])})")
+    text = "\n".join(lines)
+    with open(os.path.join(RESULTS, "isa_tables.txt"), "w") as fh:
+        fh.write(text + "\n")
+    return {
+        "paper_total": sum(PAPER_COUNTS.values()),
+        "reconstructed_total": cr["total"]["reconstructed"],
+        "groups": (rep["groups_before"], rep["groups_after"]),
+        "removed_specials": len(REMOVED_SPECIALS),
+    }
+
+
+def main():
+    t0 = time.perf_counter()
+    out = run()
+    us = (time.perf_counter() - t0) * 1e6
+    print(f"tables_isa,{us:.0f},{out}")
+    with open(os.path.join(RESULTS, "isa_tables.txt")) as fh:
+        print(fh.read())
+
+
+if __name__ == "__main__":
+    main()

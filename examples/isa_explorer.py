@@ -1,0 +1,24 @@
+"""Explore the AVX10.2 -> takum ISA transform (paper Tables I-V).
+
+    PYTHONPATH=src python examples/isa_explorer.py [group-or-regex]
+"""
+
+import sys
+
+from repro.core.avx10 import GROUPS, count_report
+from repro.core.streamline import PROPOSED_GROUPS, UNIFICATIONS, REMOVED_SPECIALS
+
+query = sys.argv[1] if len(sys.argv) > 1 else None
+print("categories:", {k: v for k, v in count_report().items()})
+for g in GROUPS:
+    if query and query.lower() not in g.gid.lower():
+        continue
+    ins = g.instructions
+    print(f"\n[{g.gid}] {g.category} ({len(ins)} instructions) {g.note}")
+    print("  " + " ".join(ins[:12]) + (" ..." if len(ins) > 12 else ""))
+    for pid, srcs in UNIFICATIONS.items():
+        if g.gid in srcs:
+            pg = next(p for p in PROPOSED_GROUPS if p.gid == pid)
+            print(f"  -> {pid} ({len(pg.instructions)} proposed) e.g. "
+                  + " ".join(pg.instructions[:6]))
+print(f"\n{len(REMOVED_SPECIALS)} format-special instructions removed entirely.")

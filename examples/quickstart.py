@@ -1,0 +1,40 @@
+"""Quickstart: the takum substrate in 60 seconds.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import takum_np
+from repro.core.isa import vaddt, vcmpt, vcvtt2t, vdppt
+from repro.core.takum import takum_decode, takum_encode
+from repro.core.streamline import streamline_report
+
+# 1. takum is one format at every width (paper Fig. 1): huge, constant range
+for n in (8, 12, 16, 32):
+    print(f"takum{n:>2}: minpos={takum_np.minpos(n):.3e} maxpos={takum_np.maxpos(n):.3e}")
+
+# 2. encode/decode round trip; tapered precision is densest near 1
+x = jnp.asarray(np.array([1.0009765625, -3.14159, 1e-20, 6.02e23], np.float32))
+bits8 = takum_encode(x, 8)
+bits16 = takum_encode(x, 16)
+print("takum8 :", np.asarray(takum_decode(bits8, 8)))
+print("takum16:", np.asarray(takum_decode(bits16, 16)))
+
+# 3. the streamlined vector ISA (paper Tables I-V) is executable
+a = takum_encode(jnp.asarray([1.5, 2.0, -0.25], jnp.float32), 16)
+b = takum_encode(jnp.asarray([0.5, -1.0, 8.0], jnp.float32), 16)
+print("VADDT16:", np.asarray(takum_decode(vaddt(a, b, 16), 16)))
+print("VCMPT16 (lt, no decode — two's-complement order):", np.asarray(vcmpt(a, b, 16, "lt")))
+print("VCVTT8T16 widening is a shift:", hex(int(np.asarray(vcvtt2t(jnp.asarray([0x40], jnp.uint32), 8, 16))[0])))
+
+# 4. the widening dot product VDPPT8PT16 (the ML hot path -> Pallas kernel)
+va = takum_encode(jnp.asarray(np.random.default_rng(0).standard_normal((2, 32)), jnp.float32), 8)
+vb = takum_encode(jnp.asarray(np.random.default_rng(1).standard_normal((2, 32)), jnp.float32), 8)
+print("VDPPT8PT16:", np.asarray(takum_decode(vdppt(va, vb, 8), 16)))
+
+# 5. the ISA streamlining result (paper's evaluation)
+rep = streamline_report()
+print(f"ISA groups {rep['groups_before']} -> {rep['groups_after']}; "
+      f"fp formats {len(rep['fp_formats_before'])} -> {len(rep['fp_formats_after'])}")

@@ -1,0 +1,85 @@
+"""Assigned-architecture registry: ``get(arch)`` / ``get_smoke(arch)`` + shapes.
+
+Each module defines CONFIG (the exact published hyperparameters from the
+assignment table) and SMOKE (a reduced same-family variant for CPU tests).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from repro.models.config import ModelConfig
+
+ARCHS = [
+    "musicgen_large",
+    "kimi_k2_1t_a32b",
+    "dbrx_132b",
+    "gemma2_2b",
+    "llama3_8b",
+    "llama3_2_3b",
+    "granite_34b",
+    "hymba_1_5b",
+    "llama3_2_vision_90b",
+    "mamba2_780m",
+]
+
+# accepted aliases (task spec spelling -> module name)
+ALIASES = {
+    "musicgen-large": "musicgen_large",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "dbrx-132b": "dbrx_132b",
+    "gemma2-2b": "gemma2_2b",
+    "llama3-8b": "llama3_8b",
+    "llama3.2-3b": "llama3_2_3b",
+    "granite-34b": "granite_34b",
+    "hymba-1.5b": "hymba_1_5b",
+    "llama-3.2-vision-90b": "llama3_2_vision_90b",
+    "mamba2-780m": "mamba2_780m",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def _mod(arch: str):
+    arch = ALIASES.get(arch, arch).replace("-", "_").replace(".", "_")
+    return importlib.import_module(f"repro.configs.{arch}")
+
+
+def get(arch: str) -> ModelConfig:
+    return _mod(arch).CONFIG
+
+
+def get_smoke(arch: str) -> ModelConfig:
+    return _mod(arch).SMOKE
+
+
+def long_context_ok(cfg: ModelConfig) -> bool:
+    """long_500k runs only for sub-quadratic families (task spec / DESIGN.md):
+    SSM and hybrid (SSM + sliding-window attention) decode in O(1)/O(w) per
+    token; pure full-attention archs are skipped."""
+    return cfg.family in ("ssm", "hybrid")
+
+
+def cells(include_skipped: bool = False):
+    """The 40-cell (arch x shape) grid; yields (arch, shape_name, runnable)."""
+    for arch in ARCHS:
+        cfg = get(arch)
+        for sname in SHAPES:
+            runnable = sname != "long_500k" or long_context_ok(cfg)
+            if runnable or include_skipped:
+                yield arch, sname, runnable

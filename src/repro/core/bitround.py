@@ -1,0 +1,179 @@
+"""Shared bit-string rounding helpers for tapered-precision codecs.
+
+Takum and posit encoders both reduce to the same final step: a *left-aligned*
+full-precision bit string (header + fraction) is rounded to the target width
+``n`` with round-to-nearest, ties-to-even **in bit space** (the monotonic-code
+rounding used by posit/takum hardware codecs), followed by saturation so that
+a nonzero value never rounds to zero and a finite value never rounds to NaR.
+
+Two implementations:
+  * a JAX one operating on ``(hi, lo)`` uint32 pairs (x64-free, Pallas-safe),
+  * a numpy one operating on uint64 (and ``(hi, lo)`` uint64 pairs for posit).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "floor_log2_u32",
+    "floor_log2_u64_np",
+    "round_body_jnp",
+    "round_body_np",
+    "round_body_np128",
+]
+
+
+def floor_log2_u64_np(v):
+    """Exact floor(log2(v)) for numpy uint64 v >= 1 (float-free: smear+popcount).
+
+    ``np.log2`` on >52-bit integers can round up across power-of-two boundaries
+    (e.g. log2(2**57 - 1) -> 57.0), so codecs must never use it on mantissas.
+    """
+    v = np.asarray(v, dtype=np.uint64)
+    for s in (1, 2, 4, 8, 16, 32):
+        v = v | (v >> np.uint64(s))
+    return np.bitwise_count(v).astype(np.int64) - 1
+
+
+def floor_log2_u32(v):
+    """floor(log2(v)) for uint32 v >= 1, branch-free (smear + popcount)."""
+    import jax.lax as lax
+
+    v = v.astype(jnp.uint32)
+    v = v | (v >> 1)
+    v = v | (v >> 2)
+    v = v | (v >> 4)
+    v = v | (v >> 8)
+    v = v | (v >> 16)
+    return lax.population_count(v).astype(jnp.int32) - 1
+
+
+def _shr_hilo_u32(hi, lo, t):
+    """(hi:lo) >> t for a 64-bit quantity in two uint32 words, 0 <= t <= 31."""
+    t = t.astype(jnp.uint32)
+    up_sh = jnp.minimum(jnp.where(t == 0, 0, 32 - t), 31).astype(jnp.uint32)
+    up = jnp.where(t == 0, jnp.uint32(0), hi << up_sh)
+    return jnp.where(t == 0, lo, (lo >> jnp.minimum(t, 31)) | up)
+
+
+def round_body_jnp(hi, lo, nbits, keep):
+    """Round a left-aligned body of ``nbits`` significant bits to ``keep`` bits.
+
+    The body value is ``hi * 2**32 + lo`` (hi may only be nonzero when
+    ``nbits > 32``).  Returns the rounded ``keep``-bit magnitude with
+    round-to-nearest-even and saturation to ``[1, 2**keep - 1]``.
+
+    All of ``nbits`` may be a traced array; ``keep`` is a Python int < 32.
+    Discarded-bit count must satisfy ``t = nbits - keep <= 31`` (true for all
+    takum widths n in [2, 32] with a 23-bit fraction).
+    """
+    hi = hi.astype(jnp.uint32)
+    lo = lo.astype(jnp.uint32)
+    t = (nbits - keep).astype(jnp.int32)
+
+    # t <= 0: no rounding, shift body left so it occupies `keep` bits.
+    sl = jnp.minimum(jnp.where(t < 0, -t, 0), 31).astype(jnp.uint32)
+    no_round = lo << sl  # hi is provably 0 when t < 0 (body < 2**keep)
+
+    tc = jnp.maximum(t, 1).astype(jnp.uint32)  # safe shift amounts when t >= 1
+    kept = _shr_hilo_u32(hi, lo, tc)
+    guard = _shr_hilo_u32(hi, lo, tc - 1) & jnp.uint32(1)
+    below_mask = jnp.where(
+        tc - 1 >= 32,
+        jnp.uint32(0xFFFFFFFF),
+        (jnp.uint32(1) << jnp.minimum(tc - 1, 31)) - 1,
+    )
+    sticky_lo = (lo & below_mask) != 0
+    sticky_hi = jnp.where(tc - 1 > 32, (hi & ((jnp.uint32(1) << jnp.minimum(tc - jnp.uint32(33), 31)) - 1)) != 0, False)
+    sticky = sticky_lo | sticky_hi
+    round_up = (guard == 1) & (sticky | ((kept & 1) == 1))
+    kept = kept + round_up.astype(jnp.uint32)
+
+    out = jnp.where(t <= 0, no_round, kept)
+    maxmag = jnp.uint32((1 << keep) - 1)
+    out = jnp.minimum(out, maxmag)  # never round up into NaR
+    out = jnp.maximum(out, jnp.uint32(1))  # never round down to zero
+    return out
+
+
+# ---------------------------------------------------------------------------
+# numpy (float64-grade) variants
+# ---------------------------------------------------------------------------
+
+
+def round_body_np(body, nbits, keep):
+    """uint64 left-aligned body of ``nbits`` bits -> rounded ``keep``-bit value.
+
+    Vectorised numpy version; ``nbits`` per-element, ``keep`` scalar < 64.
+    Requires nbits <= 63 so guard/sticky arithmetic stays in-range.
+    """
+    body = body.astype(np.uint64)
+    nbits = np.asarray(nbits, dtype=np.int64)
+    t = nbits - keep
+
+    sl = np.where(t < 0, -t, 0).astype(np.uint64)
+    no_round = body << sl
+
+    tc = np.maximum(t, 1).astype(np.uint64)
+    kept = body >> tc
+    guard = (body >> (tc - np.uint64(1))) & np.uint64(1)
+    sticky = (body & ((np.uint64(1) << (tc - np.uint64(1))) - np.uint64(1))) != 0
+    round_up = (guard == 1) & (sticky | ((kept & np.uint64(1)) == 1))
+    kept = kept + round_up.astype(np.uint64)
+
+    out = np.where(t <= 0, no_round, kept)
+    out = np.minimum(out, np.uint64((1 << keep) - 1))
+    out = np.maximum(out, np.uint64(1))
+    return out
+
+
+def round_body_np128(hi, lo, nbits, keep):
+    """128-bit body in two uint64 words -> rounded ``keep``-bit value (posit).
+
+    body = hi * 2**64 + lo, ``nbits`` significant bits (<= 127), keep < 64.
+    """
+    hi = hi.astype(np.uint64)
+    lo = lo.astype(np.uint64)
+    nbits = np.asarray(nbits, dtype=np.int64)
+    t = nbits - keep  # discarded bits; may exceed 64
+
+    sl = np.where(t < 0, -t, 0).astype(np.uint64)
+    no_round = lo << sl  # hi == 0 whenever t < 0
+
+    tc = np.maximum(t, 1).astype(np.int64)
+
+    def shr128(amount):
+        a = np.clip(amount, 0, 127).astype(np.uint64)
+        lo_part = np.where(a >= 64, np.uint64(0), lo >> (a & np.uint64(63)))
+        carry = np.where(
+            (a > 0) & (a < 64), hi << ((np.uint64(64) - a) & np.uint64(63)), np.uint64(0)
+        )
+        hi_part = np.where(a >= 64, hi >> ((a - np.uint64(64)) & np.uint64(63)), np.uint64(0))
+        return np.where(a >= 64, hi_part, lo_part | carry)
+
+    kept = shr128(tc)
+    guard = shr128(tc - 1) & np.uint64(1)
+
+    # sticky: any bit strictly below position tc-1
+    tm1 = tc - 1
+    lo_mask = np.where(
+        tm1 >= 64,
+        np.uint64(0xFFFFFFFFFFFFFFFF),
+        (np.uint64(1) << (np.clip(tm1, 0, 63).astype(np.uint64))) - np.uint64(1),
+    )
+    hi_mask = np.where(
+        tm1 > 64,
+        (np.uint64(1) << (np.clip(tm1 - 64, 0, 63).astype(np.uint64))) - np.uint64(1),
+        np.uint64(0),
+    )
+    sticky = ((lo & lo_mask) != 0) | ((hi & hi_mask) != 0)
+
+    round_up = (guard == 1) & (sticky | ((kept & np.uint64(1)) == 1))
+    kept = kept + round_up.astype(np.uint64)
+
+    out = np.where(t <= 0, no_round, kept)
+    out = np.minimum(out, np.uint64((1 << keep) - 1))
+    out = np.maximum(out, np.uint64(1))
+    return out

@@ -1,0 +1,112 @@
+"""Registry of machine number formats for the paper's benchmarks (Figs. 1-2).
+
+Each entry provides numpy float64 round-trip conversion (encode to the format,
+decode back) — the operation the paper's Figure 2 performs on every matrix —
+plus the format's dynamic-range endpoints for Figure 1.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import ml_dtypes
+import numpy as np
+
+from . import ofp8, posit_np, takum_np
+
+
+@dataclasses.dataclass(frozen=True)
+class Format:
+    name: str
+    nbits: int
+    family: str  # ieee | ofp8 | posit | takum | takum_log
+    roundtrip: Callable[[np.ndarray], np.ndarray]  # f64 -> f64 through format
+    minpos: float
+    maxpos: float
+
+
+def _ieee_roundtrip(dtype):
+    def rt(x):
+        return np.asarray(x, dtype=np.float64).astype(dtype).astype(np.float64)
+
+    return rt
+
+
+def _takum_roundtrip(n, mode):
+    def rt(x):
+        return takum_np.decode(takum_np.encode(x, n, mode), n, mode)
+
+    return rt
+
+
+def _posit_roundtrip(n):
+    def rt(x):
+        return posit_np.decode(posit_np.encode(x, n), n)
+
+    return rt
+
+
+def _ofp8_roundtrip(fmt):
+    def rt(x):
+        return ofp8.decode_np(ofp8.encode_np(x, fmt), fmt)
+
+    return rt
+
+
+def _f(dt):
+    fi = ml_dtypes.finfo(dt)
+    return float(fi.smallest_subnormal), float(fi.max)
+
+
+def _registry():
+    fmts = []
+    for name, dt, bits in [
+        ("float16", np.float16, 16),
+        ("bfloat16", ml_dtypes.bfloat16, 16),
+        ("float32", np.float32, 32),
+        ("float64", np.float64, 64),
+    ]:
+        lo, hi = (
+            (float(np.finfo(dt).smallest_subnormal), float(np.finfo(dt).max))
+            if dt in (np.float16, np.float32, np.float64)
+            else _f(dt)
+        )
+        fmts.append(Format(name, bits, "ieee", _ieee_roundtrip(dt), lo, hi))
+    for fmt in ("e4m3", "e5m2"):
+        lo, hi = _f(ofp8._ML_DTYPES[fmt])
+        fmts.append(Format(f"ofp8_{fmt}", 8, "ofp8", _ofp8_roundtrip(fmt), lo, hi))
+    for n in (8, 16, 32):
+        fmts.append(
+            Format(f"posit{n}", n, "posit", _posit_roundtrip(n), posit_np.minpos(n), posit_np.maxpos(n))
+        )
+    for n in (8, 16, 32):
+        fmts.append(
+            Format(
+                f"takum{n}",
+                n,
+                "takum",
+                _takum_roundtrip(n, "linear"),
+                takum_np.minpos(n, "linear"),
+                takum_np.maxpos(n, "linear"),
+            )
+        )
+        fmts.append(
+            Format(
+                f"takum_log{n}",
+                n,
+                "takum_log",
+                _takum_roundtrip(n, "log"),
+                takum_np.minpos(n, "log"),
+                takum_np.maxpos(n, "log"),
+            )
+        )
+    return {f.name: f for f in fmts}
+
+
+FORMATS = _registry()
+
+
+def dynamic_range_decades(fmt: Format) -> float:
+    """log10(maxpos / minpos) — the Figure 1 quantity."""
+    return float(np.log10(fmt.maxpos) - np.log10(fmt.minpos))

@@ -1,0 +1,168 @@
+"""Executable semantics for the proposed takum vector ISA (paper Tables I-V).
+
+Each proposed instruction family is a JAX callable over *packed* takum arrays
+(uint8/uint16/uint32 bit patterns).  These are the semantic reference for the
+Pallas kernels in :mod:`repro.kernels` and the numeric substrate used by the
+framework's quantisation layer.
+
+Notable takum properties the implementations exploit (paper §IV):
+
+  * compare/min/max/sort need **no decode**: n-bit patterns, read as two's-
+    complement integers, order exactly like the values (``VCMPT*``/``VMINT*``);
+  * takum(m) ⊂ takum(n) for m < n with the *same leading bits*, so widening
+    conversion is a left shift and narrowing is a bit-string round — the
+    entire F07 conversion zoo collapses to shifts (``VCVTT*2T*``);
+  * arithmetic is decode -> IEEE f32 compute -> encode (one rounding for FMA),
+    matching a hardware takum ALU with an internal linear representation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .takum import (
+    NAR,
+    sortable_int,
+    storage_dtype,
+    takum_decode,
+    takum_encode,
+)
+
+__all__ = [
+    "vaddt", "vsubt", "vmult", "vdivt", "vfmaddt", "vsqrtt",
+    "vcmpt", "vmint", "vmaxt", "vabst", "vnegt",
+    "vcvtt2t", "vcvtps2pt", "vcvtpt2ps",
+    "vdppt", "REGISTRY",
+]
+
+
+def _arith(op):
+    def f(a, b, n: int, *, mode: str = "linear"):
+        x = takum_decode(a, n, mode=mode)
+        y = takum_decode(b, n, mode=mode)
+        return takum_encode(op(x, y), n, mode=mode)
+
+    return f
+
+
+vaddt = _arith(jnp.add)
+vsubt = _arith(jnp.subtract)
+vmult = _arith(jnp.multiply)
+vdivt = _arith(jnp.divide)
+
+
+def vfmaddt(a, b, c, n: int, *, mode: str = "linear"):
+    """T-format FMA: a*b + c with a single takum rounding at the end."""
+    x, y, z = (takum_decode(v, n, mode=mode) for v in (a, b, c))
+    return takum_encode(x * y + z, n, mode=mode)
+
+
+def vsqrtt(a, n: int, *, mode: str = "linear"):
+    return takum_encode(jnp.sqrt(takum_decode(a, n, mode=mode)), n, mode=mode)
+
+
+# --- decode-free integer-domain ops (the paper's §IV-A observation) ---------
+
+
+def vnegt(a, n: int):
+    """Negate = two's complement; no decode."""
+    mask = (1 << n) - 1
+    out = (0 - a.astype(jnp.uint32)) & jnp.uint32(mask)
+    return out.astype(storage_dtype(n))
+
+
+def vabst(a, n: int):
+    key = sortable_int(a, n)
+    return jnp.where(key < 0, vnegt(a, n), a.astype(storage_dtype(n)))
+
+
+def vcmpt(a, b, n: int, op: str = "lt"):
+    """Compare takums as two's-complement ints (NaR = most-negative = smallest)."""
+    ka, kb = sortable_int(a, n), sortable_int(b, n)
+    return {
+        "lt": ka < kb, "le": ka <= kb, "eq": ka == kb,
+        "gt": ka > kb, "ge": ka >= kb, "ne": ka != kb,
+    }[op]
+
+
+def vmint(a, b, n: int):
+    return jnp.where(vcmpt(a, b, n, "lt"), a, b)
+
+
+def vmaxt(a, b, n: int):
+    return jnp.where(vcmpt(a, b, n, "gt"), a, b)
+
+
+# --- conversions -------------------------------------------------------------
+
+
+def vcvtt2t(a, m: int, n: int):
+    """takum(m) -> takum(n).  Widening is exact (left shift); narrowing rounds
+    the dropped bits (RNE on the bit string) with saturation away from 0/NaR.
+    """
+    a32 = a.astype(jnp.uint32)
+    if n == m:
+        return a32.astype(storage_dtype(n))
+    if n > m:
+        return (a32 << (n - m)).astype(storage_dtype(n))
+    t = m - n
+    is_zero = a32 == 0
+    is_nar = a32 == jnp.uint32(NAR(m))
+    neg = (a32 >> (m - 1)) & 1 == 1
+    mag = jnp.where(neg, (jnp.uint32(0) - a32) & jnp.uint32((1 << m) - 1), a32)
+    kept = mag >> t
+    guard = (mag >> (t - 1)) & 1
+    sticky = (mag & jnp.uint32((1 << (t - 1)) - 1)) != 0
+    kept = kept + ((guard == 1) & (sticky | (kept & 1 == 1))).astype(jnp.uint32)
+    kept = jnp.clip(kept, jnp.uint32(1), jnp.uint32((1 << (n - 1)) - 1))
+    out = jnp.where(neg, (jnp.uint32(0) - kept) & jnp.uint32((1 << n) - 1), kept)
+    out = jnp.where(is_zero, jnp.uint32(0), out)
+    out = jnp.where(is_nar, jnp.uint32(NAR(n)), out)
+    return out.astype(storage_dtype(n))
+
+
+def vcvtps2pt(x, n: int, *, mode: str = "linear"):
+    """float32 -> packed takum-n (VCVTPS322PT*)."""
+    return takum_encode(x, n, mode=mode)
+
+
+def vcvtpt2ps(a, n: int, *, mode: str = "linear"):
+    """packed takum-n -> float32 (VCVTPT*2PS32)."""
+    return takum_decode(a, n, mode=mode)
+
+
+# --- widening dot products (paper group F08 -> PF3) --------------------------
+
+
+def vdppt(a, b, n_in: int, *, mode: str = "linear"):
+    """VDPPT{n}PT{2n}: dot product of takum-n vectors along the last axis,
+    accumulated in f32 (the 'internal wide accumulator'), rounded once into
+    takum-2n.  The Pallas dequant-matmul kernels implement the tiled version.
+    """
+    x = takum_decode(a, n_in, mode=mode)
+    y = takum_decode(b, n_in, mode=mode)
+    acc = jnp.sum(x * y, axis=-1)
+    return takum_encode(acc, 2 * n_in, mode=mode)
+
+
+REGISTRY = {
+    # family name (paper's proposed mnemonic pattern) -> callable
+    "VADDT": vaddt,
+    "VSUBT": vsubt,
+    "VMULT": vmult,
+    "VDIVT": vdivt,
+    "VFMADDT": vfmaddt,
+    "VSQRTT": vsqrtt,
+    "VNEGT": vnegt,
+    "VABST": vabst,
+    "VCMPT": vcmpt,
+    "VMINT": vmint,
+    "VMAXT": vmaxt,
+    "VCVTT2T": vcvtt2t,
+    "VCVTPS2PT": vcvtps2pt,
+    "VCVTPT2PS": vcvtpt2ps,
+    "VDPPT": vdppt,
+}

@@ -1,0 +1,127 @@
+"""OCP 8-bit floating point (OFP8) E4M3 / E5M2 codecs, JAX + numpy.
+
+These are the AVX10.2 formats the paper proposes to replace (HF8/BF8 in Intel
+nomenclature).  E4M3 follows the OCP spec: bias 7, no infinities, S.1111.111
+is NaN, max finite 448.  E5M2 is IEEE-754 binary8-like: bias 15, has
+infinities and NaNs, max finite 57344.
+
+The JAX paths are hand-rolled bit conversions (they are also the reference
+semantics for the ISA layer's VCVT instructions); the numpy paths delegate to
+``ml_dtypes`` (authoritative) and are cross-checked against the JAX paths in
+tests.  Conversions are round-to-nearest-even, non-saturating by default
+(overflow -> NaN/Inf, matching the paper's "dynamic range exceeded"
+accounting); ``saturate=True`` gives the AVX10.2 ``...S`` instruction flavour.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+
+_U = jnp.uint32
+
+SPECS = {
+    "e4m3": dict(ebits=4, mbits=3, bias=7, max_finite=448.0, has_inf=False),
+    "e5m2": dict(ebits=5, mbits=2, bias=15, max_finite=57344.0, has_inf=True),
+}
+
+_ML_DTYPES = {"e4m3": ml_dtypes.float8_e4m3fn, "e5m2": ml_dtypes.float8_e5m2}
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "saturate"))
+def encode(x, fmt: str = "e4m3", saturate: bool = False):
+    """float32 -> 8-bit OFP8 patterns (uint8), RNE."""
+    spec = SPECS[fmt]
+    eb, mb, bias = spec["ebits"], spec["mbits"], spec["bias"]
+    x = x.astype(jnp.float32)
+    bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    sign = bits >> 31
+    absbits = bits & _U(0x7FFFFFFF)
+
+    is_nan = jnp.isnan(x)
+    is_inf = jnp.isinf(x)
+
+    e = (absbits >> 23).astype(jnp.int32) - 127  # unbiased f32 exponent
+    # subnormal target range: e < 1 - bias; shift mantissa accordingly
+    e_t = e + bias  # target biased exponent
+    # round the 23-bit mantissa (with implicit 1 for subnormal shifts) to mb bits
+    m23 = absbits & _U(0x7FFFFF)
+    full = m23 | _U(1 << 23)  # implicit one at bit 23
+
+    # normal: keep mb bits of m23;  subnormal: shift `full` right extra
+    extra = jnp.clip(1 - e_t, 0, 24)  # how far below the normal range
+    t = (23 - mb) + extra  # discard t bits of `full` (sans implicit for normal)
+    src = jnp.where(extra > 0, full, m23)
+    tc = jnp.clip(t, 1, 31).astype(_U)
+    kept = src >> tc
+    guard = (src >> (tc - 1)) & 1
+    sticky = (src & ((_U(1) << (tc - 1)) - 1)) != 0
+    kept = kept + ((guard == 1) & (sticky | ((kept & 1) == 1))).astype(_U)
+
+    # assemble; kept may carry into the exponent (works for both ranges)
+    e_sub = jnp.where(extra > 0, 0, e_t)
+    mag = (jnp.maximum(e_sub, 0).astype(_U) << mb) + kept
+
+    # flush-to-zero when everything rounds away; f32 subnormal inputs -> 0 too
+    mag = jnp.where(absbits == 0, _U(0), mag)
+    mag = jnp.where(e < -126, _U(0), mag)  # f32 subnormals: below every OFP8
+
+    max_mag_finite = (((1 << eb) - 1) << mb | ((1 << mb) - 1)) if not spec["has_inf"] else (
+        ((1 << eb) - 2) << mb | ((1 << mb) - 1)
+    )
+    if fmt == "e4m3":
+        max_mag_finite = 0x7E  # S.1111.110 = 448; S.1111.111 is NaN
+    nan_mag = _U(0x7F) if fmt == "e4m3" else _U(0x7E | 0x01)  # e5m2: 0x7D-0x7F NaN
+    inf_mag = _U(0x7C) if spec["has_inf"] else nan_mag
+
+    overflow = mag > max_mag_finite
+    mag = jnp.where(
+        overflow, jnp.where(saturate, _U(max_mag_finite), inf_mag if spec["has_inf"] else nan_mag), mag
+    )
+    mag = jnp.where(is_inf, jnp.where(saturate & (not spec["has_inf"]), _U(max_mag_finite), inf_mag), mag)
+    mag = jnp.where(is_nan, nan_mag, mag)
+    out = (sign << 7) | mag
+    return out.astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt",))
+def decode(bits, fmt: str = "e4m3"):
+    """8-bit OFP8 patterns -> float32."""
+    spec = SPECS[fmt]
+    eb, mb, bias = spec["ebits"], spec["mbits"], spec["bias"]
+    from .takum import _pow2_f32  # exact 2**k in f32 (bit assembly)
+
+    b = bits.astype(_U)
+    sign = (b >> 7) & 1
+    e_f = ((b >> mb) & ((1 << eb) - 1)).astype(jnp.int32)
+    m_f = (b & ((1 << mb) - 1)).astype(jnp.float32)
+
+    normal = (1.0 + m_f * (2.0**-mb)) * _pow2_f32(e_f - bias)
+    subn = m_f * (2.0**-mb) * _pow2_f32(jnp.full_like(e_f, 1 - bias))
+    val = jnp.where(e_f == 0, subn, normal)
+
+    if spec["has_inf"]:
+        is_inf = (e_f == (1 << eb) - 1) & (m_f == 0)
+        is_nan = (e_f == (1 << eb) - 1) & (m_f != 0)
+        val = jnp.where(is_inf, jnp.float32(jnp.inf), val)
+    else:
+        is_nan = (b & _U(0x7F)) == _U(0x7F)
+    val = jnp.where(is_nan, jnp.float32(jnp.nan), val)
+    return jnp.where(sign == 1, -val, val).astype(jnp.float32)
+
+
+# --- numpy (ml_dtypes) paths -------------------------------------------------
+
+
+def encode_np(x, fmt: str = "e4m3"):
+    """float64 -> OFP8 bit patterns via ml_dtypes (RNE, overflow->NaN/Inf)."""
+    arr = np.asarray(x, dtype=np.float64).astype(_ML_DTYPES[fmt])
+    return arr.view(np.uint8)
+
+
+def decode_np(bits, fmt: str = "e4m3"):
+    return np.asarray(bits, dtype=np.uint8).view(_ML_DTYPES[fmt]).astype(np.float64)

@@ -1,0 +1,288 @@
+"""Takum arithmetic codec in pure JAX (uint32-based, x64-free, Pallas-safe).
+
+Implements the takum format of Hunhold (CoNGA 2024), as used by the paper
+*Streamlining SIMD ISA Extensions with Takum Arithmetic* for its T8/T16/T32/T64
+instruction families.  Bit layout (MSB -> LSB) of an n-bit takum:
+
+    S | D | R(3 bits) | C(r bits) | M(p bits),      n = 5 + r + p
+
+    r = R            if D == 1 else 7 - R
+    c = 2**r - 1 + C if D == 1 else -2**(r+1) + 1 + C          (characteristic)
+    f = M / 2**p                                                (fraction)
+    l = (1 - 2 S) * (c + f)                                     (log-value)
+
+    value =  0                     if bits == 0
+             NaR                   if bits == 1 0...0
+             (-1)**S * sqrt(e)**l  (logarithmic takum)
+             (-1)**S * 2**floor(l') * (1 + frac(l')), l' = |l|  (linear takum)
+
+Negation is two's complement of the whole bit string; bit strings interpreted
+as n-bit two's-complement integers order identically to their values (used by
+the ISA layer for format-agnostic compares).  Bit strings shorter than 12 bits
+behave as if zero-extended to 12 bits (C/M fields truncate).
+
+Encoders round to nearest with ties-to-even on the bit string and saturate
+(nonzero never becomes 0, finite never becomes NaR).  See DESIGN.md §6.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .bitround import floor_log2_u32, round_body_jnp
+
+__all__ = [
+    "NAR",
+    "takum_encode",
+    "takum_encode_sr",
+    "takum_decode",
+    "takum_decode_f32bits",
+    "sortable_int",
+    "storage_dtype",
+]
+
+# log2(sqrt(e)): linear <-> logarithmic conversion constant
+_LOG2_SQRT_E = 0.7213475204444817
+_INV_LOG2_SQRT_E = 1.0 / _LOG2_SQRT_E
+
+_U = jnp.uint32
+_I = jnp.int32
+
+
+def NAR(n: int) -> int:
+    """The Not-a-Real bit pattern for width n (1 followed by zeros)."""
+    return 1 << (n - 1)
+
+
+def storage_dtype(n: int):
+    """Narrowest unsigned container for an n-bit takum."""
+    if n <= 8:
+        return jnp.uint8
+    if n <= 16:
+        return jnp.uint16
+    return jnp.uint32
+
+
+def _split_f32(a):
+    """|a| (f32) -> (e, m23): a = 2**e * (1 + m23/2**23). Subnormal-aware."""
+    bits = jax.lax.bitcast_convert_type(a, jnp.uint32)
+    raw_e = (bits >> 23).astype(_I)
+    raw_m = bits & _U(0x7FFFFF)
+    # subnormals: a = raw_m * 2**-149; normalise so msb is the implicit 1
+    k = floor_log2_u32(jnp.maximum(raw_m, 1))  # msb position of raw_m
+    sub_sh = (23 - k).astype(_U)
+    sub_m = (raw_m << jnp.minimum(sub_sh, _U(31))) & _U(0x7FFFFF)
+    sub_e = k - 149
+    e = jnp.where(raw_e == 0, sub_e, raw_e - 127)
+    m23 = jnp.where(raw_e == 0, sub_m, raw_m)
+    return e, m23
+
+
+def _header(c):
+    """Characteristic c in [-255, 254] -> (H, header_len) with H = D|R|C."""
+    c = c.astype(_I)
+    neg = c < 0
+    g = jnp.where(neg, -c, c + 1).astype(_U)  # in [1, 255]
+    r = floor_log2_u32(g)  # regime in [0, 7]
+    ru = r.astype(_U)
+    C = jnp.where(neg, c + (1 << (r + 1)) - 1, c - ((1 << r) - 1)).astype(_U)
+    R = jnp.where(neg, 7 - r, r).astype(_U)
+    D = jnp.where(neg, _U(0), _U(1))
+    H = (D << (ru + 3)) | (R << ru) | C  # 4 + r bits
+    return H, (4 + r).astype(_I), r
+
+
+def _encode_from_cm(c, mf, n: int, rnd_bits=None):
+    """Shared encode tail: characteristic + 23-bit fraction -> n-bit magnitude.
+
+    ``rnd_bits`` (uint32 random, optional) switches RNE to stochastic rounding.
+    """
+    sat_hi = c > 254
+    sat_lo = c < -255
+    c = jnp.clip(c, -255, 254)
+
+    H, hlen, _r = _header(c)
+    # body = H << 23 | mf   (<= 34 bits), split into uint32 halves
+    hi = H >> 9
+    lo = ((H & _U(0x1FF)) << 23) | mf
+    nbits = hlen + 23
+
+    if rnd_bits is None:
+        mag = round_body_jnp(hi, lo, nbits, n - 1)
+    else:
+        # stochastic rounding: add U[0, 2**t) below the kept bits, truncate
+        t = jnp.clip(nbits - (n - 1), 0, 31)
+        mask = jnp.where(t == 0, _U(0), (_U(1) << jnp.minimum(t.astype(_U), _U(31))) - 1)
+        add = rnd_bits & mask
+        lo2 = lo + add
+        hi2 = hi + (lo2 < lo).astype(_U)
+        tc = jnp.maximum(t, 1).astype(_U)
+        up_sh = jnp.minimum(_U(32) - tc, _U(31))
+        kept = jnp.where(t == 0, lo2, (lo2 >> jnp.minimum(tc, _U(31))) | (hi2 << up_sh))
+        mag = jnp.where(t == 0, lo2, kept)
+        mag = jnp.clip(mag, _U(1), _U((1 << (n - 1)) - 1))
+
+    mag = jnp.where(sat_hi, _U((1 << (n - 1)) - 1), mag)
+    mag = jnp.where(sat_lo, _U(1), mag)
+    return mag
+
+
+def _encode_impl(x, n: int, mode: str, rnd_bits=None):
+    x = x.astype(jnp.float32)
+    a = jnp.abs(x)
+    is_zero = a == 0
+    is_nar = jnp.isnan(x) | jnp.isinf(x)
+    neg = (jnp.signbit(x)) & (~is_zero) & (~is_nar)
+
+    safe_a = jnp.where(is_zero | is_nar, jnp.float32(1.0), a)
+    if mode == "linear":
+        c, mf = _split_f32(safe_a)
+    elif mode == "log":
+        # l = log_sqrt(e)(a) = 2 ln a = log2(a) / log2(sqrt(e))
+        l = jnp.log2(safe_a) * jnp.float32(_INV_LOG2_SQRT_E)
+        cf = jnp.floor(l)
+        f = l - cf
+        mf = jnp.floor(f * jnp.float32(1 << 23)).astype(_U)
+        carry = mf >= _U(1 << 23)
+        c = cf.astype(_I) + carry.astype(_I)
+        mf = jnp.where(carry, _U(0), mf)
+    else:
+        raise ValueError(f"unknown takum mode: {mode}")
+
+    mag = _encode_from_cm(c, mf, n, rnd_bits)
+    enc = jnp.where(neg, (_U(0) - mag) & _U((1 << n) - 1), mag)
+    enc = jnp.where(is_zero, _U(0), enc)
+    enc = jnp.where(is_nar, _U(NAR(n)), enc)
+    return enc
+
+
+@functools.partial(jax.jit, static_argnums=(1,), static_argnames=("mode", "packed"))
+def takum_encode(x, n: int, *, mode: str = "linear", packed: bool = True):
+    """Encode float32 array -> n-bit takum bit patterns.
+
+    Returns uint8/uint16/uint32 per ``storage_dtype(n)`` when ``packed``,
+    else raw uint32.
+    """
+    enc = _encode_impl(x, n, mode)
+    return enc.astype(storage_dtype(n)) if packed else enc
+
+
+@functools.partial(jax.jit, static_argnums=(2,), static_argnames=("mode", "packed"))
+def takum_encode_sr(x, key, n: int, *, mode: str = "linear", packed: bool = True):
+    """Stochastically-rounded takum encode (for gradients/optimizer state)."""
+    rnd = jax.random.bits(key, shape=jnp.shape(x), dtype=jnp.uint32)
+    enc = _encode_impl(x, n, mode, rnd_bits=rnd)
+    return enc.astype(storage_dtype(n)) if packed else enc
+
+
+def _decode_fields(bits, n: int):
+    """n-bit patterns -> (neg, c, M, p) with two's-complement magnitude parse."""
+    bits = bits.astype(_U) & _U((1 << n) - 1)
+    neg = ((bits >> (n - 1)) & 1) == 1
+    mag = jnp.where(neg, (_U(0) - bits) & _U((1 << n) - 1), bits)
+
+    D = (mag >> (n - 2)) & 1
+    R = ((mag >> (n - 5)) & 7).astype(_I)
+    r = jnp.where(D == 1, R, 7 - R)
+    rem = n - 5  # bits available after the 5 header bits (>= 3 for n >= 8)
+    rem_v = mag & _U((1 << rem) - 1)
+
+    have = rem >= r  # does C fit fully?
+    C_full = rem_v >> jnp.maximum(_I(rem) - r, 0).astype(_U)
+    C_pad = rem_v << jnp.clip(r - rem, 0, 31).astype(_U)  # implicit zero-extension
+    C = jnp.where(have, C_full, C_pad)
+
+    p = jnp.maximum(rem - r, 0)
+    M = jnp.where(have, rem_v & ((_U(1) << jnp.minimum(p.astype(_U), _U(31))) - 1), _U(0))
+
+    c = jnp.where(
+        D == 1, ((_I(1) << jnp.minimum(r, 30)) - 1) + C.astype(_I),
+        1 - (_I(1) << jnp.minimum(r + 1, 30)) + C.astype(_I),
+    )
+    return neg, c, M, p
+
+
+def _pow2_f32(k):
+    """Exact float32 2**k for integer k in [-126, 127] (bit assembly)."""
+    kk = jnp.clip(k, -126, 127)
+    return jax.lax.bitcast_convert_type(((kk + 127).astype(_U)) << 23, jnp.float32)
+
+
+def _scale_pow2(x, c):
+    """x * 2**c in float32, exact scaling, c in [-252, 254]; saturates at inf."""
+    a = jnp.clip(c, -126, 127)
+    b = jnp.clip(c - a, -126, 127)
+    return x * _pow2_f32(a) * _pow2_f32(b)
+
+
+@functools.partial(jax.jit, static_argnums=(1,), static_argnames=("mode",))
+def takum_decode(bits, n: int, *, mode: str = "linear"):
+    """Decode n-bit takum patterns -> float32 (clamped to f32 finite range).
+
+    NaR -> NaN.  Values beyond float32 range saturate to +/- max-finite;
+    values below the smallest subnormal flush to zero.
+    """
+    bits32 = bits.astype(_U)
+    is_zero = (bits32 & _U((1 << n) - 1)) == 0
+    is_nar = (bits32 & _U((1 << n) - 1)) == _U(NAR(n))
+    neg, c, M, p = _decode_fields(bits32, n)
+
+    f = M.astype(jnp.float32) * _pow2_f32(-p)  # exact: M < 2**p <= 2**27
+    if mode == "linear":
+        val = _scale_pow2(1.0 + f, c)
+        val = jnp.where(c < -252, jnp.float32(0), val)  # below f32 subnormals
+    else:
+        l = (c.astype(jnp.float32) + f) * jnp.float32(_LOG2_SQRT_E)
+        lf = jnp.floor(l)
+        val = _scale_pow2(jnp.exp2(l - lf), jnp.clip(lf, -253, 254).astype(_I))
+        val = jnp.where(lf < -252, jnp.float32(0), val)
+    val = jnp.minimum(val, jnp.float32(3.4028235e38))
+    val = jnp.where(neg, -val, val)
+    val = jnp.where(is_zero, jnp.float32(0), val)
+    val = jnp.where(is_nar, jnp.float32(jnp.nan), val)
+    return val
+
+
+def takum_decode_f32bits(bits, n: int):
+    """Branch-free *linear* takum decode emitting raw IEEE-754 f32 bit patterns.
+
+    This is the kernel-friendly decode (pure integer ops, no transcendentals):
+    it assembles the float32 directly.  Semantics: c > 127 saturates to
+    max-finite, c < -126 flushes to zero (TPU FTZ), NaR -> canonical NaN.
+    Requires p <= 23, i.e. n <= 28 (kernels use n in {8, 16}).
+    """
+    if n > 28:
+        raise ValueError("takum_decode_f32bits supports n <= 28")
+    bits32 = bits.astype(_U)
+    masked = bits32 & _U((1 << n) - 1)
+    is_zero = masked == 0
+    is_nar = masked == _U(NAR(n))
+    neg, c, M, p = _decode_fields(bits32, n)
+
+    sat_hi = c > 127
+    flush = c < -126
+    e_fld = (jnp.clip(c, -126, 127) + 127).astype(_U)
+    m_fld = M << jnp.minimum((23 - p).astype(_U), _U(23))
+    out = (e_fld << 23) | m_fld
+    out = jnp.where(sat_hi, _U(0x7F7FFFFF), out)
+    out = jnp.where(flush, _U(0), out)
+    out = jnp.where(is_zero, _U(0), out)
+    out = jnp.where(is_nar, _U(0x7FC00000), out)
+    out = out | (neg.astype(_U) << 31)
+    out = jnp.where(is_zero | is_nar, out & _U(0x7FFFFFFF), out)  # unsigned 0/NaN
+    return out
+
+
+def sortable_int(bits, n: int):
+    """Takum patterns -> int32 keys that order identically to the real values.
+
+    This is the paper's 'takums compare like two's-complement integers'
+    property (§IV-A): sign-extend the n-bit pattern into int32.
+    """
+    sh = _U(32 - n)
+    return (
+        jax.lax.bitcast_convert_type((bits.astype(_U) << sh), jnp.int32) >> sh.astype(_I)
+    )

@@ -1,0 +1,58 @@
+"""Public jit'd entry points for the Pallas kernels (+ auto ref fallback).
+
+``use_kernels(False)`` routes every op through the pure-jnp reference —
+useful inside large jitted programs (dry-run lowering) where interpret-mode
+pallas calls would be slow, and as an A/B switch in benchmarks.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import ref
+from .takum_attention import takum_decode_attention
+from .takum_codec import takum_decode_2d, takum_encode_2d
+from .takum_matmul import takum_dual_matmul, takum_matmul
+
+_USE_KERNELS = True
+
+
+def use_kernels(flag: bool) -> None:
+    global _USE_KERNELS
+    _USE_KERNELS = flag
+
+
+def kernels_enabled() -> bool:
+    return _USE_KERNELS
+
+
+def encode(x, n: int):
+    """float32 [..., R, C] -> packed takum-n."""
+    if _USE_KERNELS and x.ndim == 2:
+        return takum_encode_2d(x, n)
+    return ref.codec_encode_ref(x, n)
+
+
+def decode(bits, n: int):
+    if _USE_KERNELS and bits.ndim == 2:
+        return takum_decode_2d(bits, n)
+    return ref.codec_decode_ref(bits, n)
+
+
+def matmul(x, w_bits, n: int, out_dtype=jnp.float32, **blocks):
+    """x @ decode(w_bits): the dequant-in-kernel GEMM (VDPPT analogue)."""
+    if _USE_KERNELS:
+        return takum_matmul(x, w_bits, n, out_dtype=out_dtype, **blocks)
+    return ref.takum_matmul_ref(x, w_bits, n, out_dtype=out_dtype)
+
+
+def dual_matmul(x_bits, w_bits, n: int, out_dtype=jnp.float32, **blocks):
+    if _USE_KERNELS:
+        return takum_dual_matmul(x_bits, w_bits, n, out_dtype=out_dtype, **blocks)
+    return ref.takum_dual_matmul_ref(x_bits, w_bits, n, out_dtype=out_dtype)
+
+
+def decode_attention(q, k_bits, v_bits, n: int, **kw):
+    if _USE_KERNELS:
+        return takum_decode_attention(q, k_bits, v_bits, n, **kw)
+    return ref.decode_attention_ref(q, k_bits, v_bits, n)

@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These define the exact semantics the kernels must reproduce (tests assert
+allclose/equality across shape & dtype sweeps).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.takum import takum_decode_f32bits, takum_encode
+import jax
+
+
+def codec_encode_ref(x, n: int):
+    """float32 -> packed takum-n patterns (linear mode)."""
+    return takum_encode(x, n, mode="linear")
+
+
+def codec_decode_ref(bits, n: int):
+    """packed takum-n -> float32 with kernel clamp semantics."""
+    out = takum_decode_f32bits(bits, n)
+    return jax.lax.bitcast_convert_type(out, jnp.float32)
+
+
+def takum_matmul_ref(x, w_bits, n: int, out_dtype=jnp.float32):
+    """x [M, K] (f32/bf16) @ decode(w_bits [K, N]) -> [M, N] f32 accumulate."""
+    w = codec_decode_ref(w_bits, n)
+    return jnp.dot(
+        x.astype(jnp.float32), w, preferred_element_type=jnp.float32
+    ).astype(out_dtype)
+
+
+def takum_dual_matmul_ref(x_bits, w_bits, n: int, out_dtype=jnp.float32):
+    """decode(x_bits [M, K]) @ decode(w_bits [K, N]) — the VDPPT analogue."""
+    x = codec_decode_ref(x_bits, n)
+    w = codec_decode_ref(w_bits, n)
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def decode_attention_ref(q, k_bits, v_bits, n: int, *, scale=None):
+    """Single-token decode attention against a takum-quantised KV cache.
+
+    q: [B, H, d] f32;  k_bits/v_bits: [B, Hkv, S, d] packed takum-n.
+    GQA: H is a multiple of Hkv, query head h uses kv head h // (H // Hkv).
+    Returns [B, H, d] f32.
+    """
+    B, H, d = q.shape
+    Bk, Hkv, S, dk = k_bits.shape
+    assert (B, d) == (Bk, dk) and H % Hkv == 0
+    g = H // Hkv
+    k = codec_decode_ref(k_bits, n)  # [B, Hkv, S, d]
+    v = codec_decode_ref(v_bits, n)
+    scale = (d ** -0.5) if scale is None else scale
+    qg = q.reshape(B, Hkv, g, d)
+    logits = jnp.einsum("bhgd,bhsd->bhgs", qg.astype(jnp.float32), k) * scale
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bhsd->bhgd", p, v)
+    return out.reshape(B, H, d)

@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: flash-decode attention over a takum-quantised KV cache.
+
+The memory-wall case the paper closes with ("particular emphasis on 8- and
+16-bit types"): single-token decode attention is HBM-bandwidth-bound on the
+KV cache read, so storing KV as takum-8/16 cuts the dominant roofline term
+2-4x vs bfloat16/f32.  K/V tiles are decoded in VMEM right before the MXU.
+
+Layout: q [B, H, d] f32, kv cache [B, Hkv, S, d] packed takum-n (GQA: each kv
+head serves g = H/Hkv query heads).  Grid (B, Hkv, S/bs); online softmax with
+running (max, denom, acc) in VMEM scratch across the S blocks.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .common import decode_takum_f32, interpret_default
+
+_LANE = 128
+
+
+def _decode_attn_kernel(n: int, scale: float, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref):
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]  # [g, d] f32
+    k = decode_takum_f32(k_ref[0, 0], n)  # [bs, d]
+    v = decode_takum_f32(v_ref[0, 0], n)  # [bs, d]
+
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # [g, bs]
+
+    m_prev = m_ref[:, :1]  # [g, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1, keepdims=True))
+    p = jnp.exp(logits - m_new)  # [g, bs]
+    alpha = jnp.exp(m_prev - m_new)  # [g, 1]
+
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    l_new = l_ref[:, :1] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(s == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[0, 0] = (acc_ref[...] / l_ref[:, :1]).astype(o_ref.dtype)
+
+
+def _tile(dim, want):
+    t = min(dim, want)
+    while dim % t:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("n", "block_s", "interpret"))
+def takum_decode_attention(q, k_bits, v_bits, n: int, *, block_s=512, interpret=None):
+    """One-token decode attention; returns [B, H, d] f32.
+
+    q: [B, H, d] f32; k_bits/v_bits: [B, Hkv, S, d] packed takum-n.
+    """
+    interpret = interpret_default() if interpret is None else interpret
+    B, H, d = q.shape
+    _, Hkv, S, _ = k_bits.shape
+    assert H % Hkv == 0
+    g = H // Hkv
+    bs = _tile(S, block_s)
+    scale = float(d) ** -0.5
+
+    qg = q.reshape(B, Hkv, g, d)
+    grid = (B, Hkv, S // bs)
+    out = pl.pallas_call(
+        functools.partial(_decode_attn_kernel, n, scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, d), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((1, 1, bs, d), lambda b, h, s: (b, h, s, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda b, h, s: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, g, d), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((g, _LANE), jnp.float32),
+            pltpu.VMEM((g, _LANE), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k_bits, v_bits)
+    return out.reshape(B, H, d)

@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: vectorised takum encode/decode (the VCVT instructions).
+
+Element-wise codec over 2D tiles.  BlockSpec keeps one (block_rows, block_cols)
+tile of input + output in VMEM; the body is branch-free integer bit
+manipulation (shared ≤12-bit header decoder, paper §I) feeding the VPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.takum import storage_dtype
+from .common import decode_takum_f32, encode_takum_from_f32, interpret_default
+
+
+def _decode_kernel(n: int, b_ref, o_ref):
+    o_ref[...] = decode_takum_f32(b_ref[...], n)
+
+
+def _encode_kernel(n: int, x_ref, o_ref):
+    enc = encode_takum_from_f32(x_ref[...], n)
+    o_ref[...] = enc.astype(o_ref.dtype)
+
+
+def _tile(dim, want):
+    t = min(dim, want)
+    while dim % t:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("n", "block_rows", "block_cols", "interpret"))
+def takum_decode_2d(bits, n: int, *, block_rows=256, block_cols=512, interpret=None):
+    """[R, C] packed takum-n -> [R, C] float32."""
+    interpret = interpret_default() if interpret is None else interpret
+    R, C = bits.shape
+    br, bc = _tile(R, block_rows), _tile(C, block_cols)
+    grid = (R // br, C // bc)
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, n),
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, bc), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((R, C), jnp.float32),
+        interpret=interpret,
+    )(bits)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "block_rows", "block_cols", "interpret"))
+def takum_encode_2d(x, n: int, *, block_rows=256, block_cols=512, interpret=None):
+    """[R, C] float32 -> [R, C] packed takum-n (uint8/uint16)."""
+    interpret = interpret_default() if interpret is None else interpret
+    R, C = x.shape
+    br, bc = _tile(R, block_rows), _tile(C, block_cols)
+    grid = (R // br, C // bc)
+    return pl.pallas_call(
+        functools.partial(_encode_kernel, n),
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, bc), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((R, C), storage_dtype(n)),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,121 @@
+"""Pallas TPU kernel: dequantising takum matmul (the VDPPT* widening dots).
+
+Computes ``x @ decode(w)`` with w stored as packed takum-8/16 in HBM and
+decoded tile-by-tile in VMEM before hitting the MXU.  This is the TPU-native
+adaptation of the paper's widening dot-product instructions (F08 ->
+VDPPT8PT16 etc.): takum is the storage/transport format, the MXU replaces
+the SIMD lane, accumulation is f32.
+
+Grid: (M/bm, N/bn, K/bk), K innermost; one f32 [bm, bn] accumulator tile
+lives in VMEM scratch across the K steps.  MXU-aligned tile defaults
+(multiples of 128 on the contracted/output dims).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .common import decode_takum_f32, interpret_default
+
+
+def _mm_kernel(n: int, x_ref, w_ref, o_ref, acc_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = decode_takum_f32(w_ref[...], n)  # VMEM dequant: uint -> f32
+    acc_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32), w, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _dual_kernel(n: int, x_ref, w_ref, o_ref, acc_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = decode_takum_f32(x_ref[...], n)
+    w = decode_takum_f32(w_ref[...], n)
+    acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _tile(dim, want):
+    t = min(dim, want)
+    while dim % t:
+        t -= 1
+    return t
+
+
+def _call(kernel, n, x, w, out_dtype, bm, bn, bk, interpret):
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2, (x.shape, w.shape)
+    bm, bn, bk = _tile(M, bm), _tile(N, bn), _tile(K, bk)
+    grid = (M // bm, N // bn, K // bk)
+    return pl.pallas_call(
+        functools.partial(kernel, n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n", "out_dtype", "bm", "bn", "bk", "interpret")
+)
+def takum_matmul(x, w_bits, n: int, *, out_dtype=jnp.float32, bm=256, bn=256, bk=512, interpret=None):
+    """x [M,K] f32/bf16 @ decode(w_bits [K,N] takum-n) -> [M,N] out_dtype."""
+    interpret = interpret_default() if interpret is None else interpret
+    return _call(_mm_kernel, n, x, w_bits, out_dtype, bm, bn, bk, interpret)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def takum_matmul_ad(x, w_bits, n: int):
+    """Differentiable wrapper: forward = dequant-matmul kernel; backward
+    propagates to x only (``dx = g @ decode(w).T``, itself a dequant-matmul on
+    the bit-transposed weights).  Quantised weights receive no cotangent —
+    they are storage; master parameters are updated by the optimizer and
+    re-encoded (see repro.quant)."""
+    return takum_matmul(x, w_bits, n)
+
+
+def _takum_matmul_fwd(x, w_bits, n: int):
+    # zero-size token carries x's dtype into the bwd rule (residuals must be arrays)
+    return takum_matmul(x, w_bits, n), (w_bits, jnp.zeros((0,), x.dtype))
+
+
+def _takum_matmul_bwd(n: int, res, g):
+    w_bits, dtype_token = res
+    dx = takum_matmul(g, w_bits.T, n)
+    return dx.astype(dtype_token.dtype), None
+
+
+takum_matmul_ad.defvjp(_takum_matmul_fwd, _takum_matmul_bwd)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n", "out_dtype", "bm", "bn", "bk", "interpret")
+)
+def takum_dual_matmul(x_bits, w_bits, n: int, *, out_dtype=jnp.float32, bm=256, bn=256, bk=512, interpret=None):
+    """decode(x_bits) @ decode(w_bits), both packed takum-n (VDPPT analogue)."""
+    interpret = interpret_default() if interpret is None else interpret
+    return _call(_dual_kernel, n, x_bits, w_bits, out_dtype, bm, bn, bk, interpret)

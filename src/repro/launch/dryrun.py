@@ -1,0 +1,215 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: AOT lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: ``jax.jit``
+with explicit in/out shardings must lower, SPMD-partition and compile for
+the 16x16 single-pod mesh and the 2x16x16 multi-pod mesh.  Records
+``memory_analysis`` / ``cost_analysis`` / HLO collective bytes into
+``benchmarks/results/dryrun/<cell>.json`` for the roofline report.
+
+Run one cell (subprocess-friendly; compiles are minutes each on 1 CPU core):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3_8b \
+        --shape train_4k [--multi-pod] [--policy takum] [--out DIR]
+
+or ``--all`` to sweep every live cell sequentially.
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.dist import sharding as shd
+from repro.dist import step as dstep
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as T
+from repro.quant.policy import POLICIES, is_takum
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "../../../benchmarks/results/dryrun")
+
+
+def input_specs(cfg, shape: configs.ShapeSpec):
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    B, S = shape.batch, shape.seq
+    sds = jax.ShapeDtypeStruct
+    if shape.kind in ("train", "prefill"):
+        batch = {"tokens": sds((B, S), jnp.int32)}
+        if cfg.family == "vlm":
+            batch["media"] = sds((B, cfg.num_media_tokens, cfg.media_d), jnp.float32)
+        return batch
+    # decode: one new token against a seq-S cache
+    batch = {"token": sds((B,), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["media"] = sds((B, cfg.num_media_tokens, cfg.media_d), jnp.float32)
+    return batch
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op in the (post-SPMD) HLO."""
+    sizes = {"f32": 4, "f16": 2, "bf16": 2, "f64": 8, "s32": 4, "u32": 4,
+             "s8": 1, "u8": 1, "s16": 2, "u16": 2, "pred": 1, "s64": 8, "u64": 8}
+    out = {k: 0 for k in ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")}
+    counts = {k: 0 for k in out}
+    shape_re = re.compile(r"(f64|f32|f16|bf16|pred|s8|u8|s16|u16|s32|u32|s64|u64)\[([0-9,]*)\]")
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s*(\(?)([a-z0-9\[\],\s{}:#]*?)\s*(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)(-start|-done)?\(", line)
+        if not m or m.group(4) == "-done":
+            continue
+        op = m.group(3)
+        nbytes = 0
+        for dt, dims in shape_re.findall(line.split("(")[0]):
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * sizes[dt]
+        out[op] += nbytes
+        counts[op] += 1
+    return {"bytes": out, "counts": counts, "total_bytes": sum(out.values())}
+
+
+def _flops_bytes(compiled):
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        return {"flops": float(ca.get("flops", -1)), "bytes accessed": float(ca.get("bytes accessed", -1)),
+                "raw_keys": sorted(ca.keys())[:40]}
+    except Exception as e:  # pragma: no cover
+        return {"error": repr(e)}
+
+
+def _memory(compiled):
+    try:
+        ma = compiled.memory_analysis()
+        get = lambda k: float(getattr(ma, k, -1))
+        return {
+            "argument_size": get("argument_size_in_bytes"),
+            "output_size": get("output_size_in_bytes"),
+            "temp_size": get("temp_size_in_bytes"),
+            "generated_code_size": get("generated_code_size_in_bytes"),
+        }
+    except Exception as e:  # pragma: no cover
+        return {"error": repr(e)}
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, policy: str = "takum",
+             mesh=None, lower_only: bool = False) -> dict:
+    cfg = configs.get(arch).with_(quant=POLICIES[policy])
+    shape = configs.SHAPES[shape_name]
+    if shape_name == "long_500k" and not configs.long_context_ok(cfg):
+        return {"skipped": "full-attention arch at 500k context (DESIGN.md)"}
+    mesh = mesh or make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+
+    # master dtype: 1T-class models train with bf16 master + takum moments
+    master = jnp.bfloat16 if cfg.param_count() > 3e11 else jnp.float32
+
+    if shape.kind == "train":
+        step = dstep.make_train_step(cfg, mesh, master_dtype=master)
+        ss = dstep.state_shapes(cfg, master_dtype=master)
+        sspec = dstep.train_state_specs(cfg, mesh, master_dtype=master)
+        bspec = shd.batch_specs(cfg, mesh, kind="train", batch=shape.batch)
+        fn = jax.jit(
+            step,
+            in_shardings=(shd.named(mesh, sspec), shd.named(mesh, bspec)),
+            out_shardings=(shd.named(mesh, sspec), None),
+            donate_argnums=(0,),
+        )
+        args = (ss, input_specs(cfg, shape))
+    elif shape.kind == "prefill":
+        ps = (dstep.serve_param_shapes(cfg) if is_takum(cfg.quant.weights)
+              else dstep.param_shapes(cfg, jnp.bfloat16))
+        pspec = shd.param_specs(cfg, ps, mesh)
+        bspec = shd.batch_specs(cfg, mesh, kind="prefill", batch=shape.batch)
+        cache_shape = jax.eval_shape(lambda: T.init_cache(cfg, shape.batch, shape.seq))
+        cspec = shd.cache_specs(cfg, cache_shape, mesh)
+        step = dstep.make_prefill_step(cfg, mesh)
+        fn = jax.jit(
+            step,
+            in_shardings=(shd.named(mesh, pspec), shd.named(mesh, bspec)),
+            out_shardings=(None, shd.named(mesh, cspec)),
+        )
+        args = (ps, input_specs(cfg, shape))
+    else:  # decode
+        ps = (dstep.serve_param_shapes(cfg) if is_takum(cfg.quant.weights)
+              else dstep.param_shapes(cfg, jnp.bfloat16))
+        pspec = shd.param_specs(cfg, ps, mesh)
+        bspec = shd.batch_specs(cfg, mesh, kind="decode", batch=shape.batch)
+        cache_shape = jax.eval_shape(lambda: T.init_cache(cfg, shape.batch, shape.seq))
+        cspec = shd.cache_specs(cfg, cache_shape, mesh)
+        step = dstep.make_serve_step(cfg, mesh)
+        fn = jax.jit(
+            step,
+            in_shardings=(
+                shd.named(mesh, pspec), shd.named(mesh, bspec), shd.named(mesh, cspec)
+            ),
+            out_shardings=(None, shd.named(mesh, cspec)),
+            donate_argnums=(2,),
+        )
+        args = (ps, input_specs(cfg, shape), cache_shape)
+
+    lowered = fn.lower(*args)
+    t_lower = time.time() - t0
+    rec = {"arch": arch, "shape": shape_name, "kind": shape.kind,
+           "multi_pod": multi_pod, "policy": policy,
+           "mesh": dict(mesh.shape), "lower_s": round(t_lower, 1)}
+    if lower_only:
+        return rec
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0 - t_lower, 1)
+    rec["cost"] = _flops_bytes(compiled)
+    rec["memory"] = _memory(compiled)
+    rec["collectives"] = collective_bytes(compiled.as_text())
+    rec["model_flops_param_count"] = cfg.param_count()
+    rec["model_flops_active_count"] = cfg.active_param_count()
+    print(json.dumps({k: rec[k] for k in ("arch", "shape", "multi_pod", "compile_s")}))
+    print("memory_analysis:", rec["memory"])
+    print("cost_analysis flops:", rec["cost"].get("flops"))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--policy", default="takum", choices=list(POLICIES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    cells = (
+        [(a, s) for a, s, ok in configs.cells() ]
+        if args.all
+        else [(args.arch, args.shape)]
+    )
+    for arch, shape in cells:
+        name = f"{arch}__{shape}__{'pod2' if args.multi_pod else 'pod1'}__{args.policy}{args.tag}"
+        path = os.path.join(args.out, name + ".json")
+        if os.path.exists(path):
+            print("skip cached", name)
+            continue
+        try:
+            rec = run_cell(arch, shape, multi_pod=args.multi_pod, policy=args.policy)
+        except Exception:
+            rec = {"arch": arch, "shape": shape, "multi_pod": args.multi_pod,
+                   "error": traceback.format_exc()[-4000:]}
+            print("FAILED", name)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

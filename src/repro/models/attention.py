@@ -1,0 +1,196 @@
+"""Memory-efficient (flash-style) attention in pure JAX with a custom VJP.
+
+Forward: a single ``lax.scan`` over KV chunks with an online softmax; peak
+activation memory is O(S * chunk_kv) per head instead of O(S^2).  Backward:
+the standard FlashAttention-2 recomputation — per KV chunk, probabilities are
+rebuilt from the saved row logsumexp, so nothing quadratic is ever stored.
+
+Supports: GQA (kv heads broadcast over query groups), causal masking,
+sliding-window masking (Gemma-2 local layers, Hymba), attention-logit
+softcap (Gemma-2), and non-causal cross-attention.  Shapes follow
+[B, S, H, D] ("BSHD") with kv [B, Skv, Hkv, D].
+
+This is substrate (pure jnp, shard_map/vmap-compatible), distinct from the
+Pallas *decode* kernel in repro.kernels (which serves the single-token path
+against a takum-compressed cache).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+
+def _chunk_mask(q_pos, k_pos, causal: bool, window):
+    """[bq, bk] boolean mask; True = attend.  ``window`` may be a traced
+    scalar (0 = no window) — Gemma-2 alternates it across the layer scan."""
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
+    if causal:
+        m &= q_pos[:, None] >= k_pos[None, :]
+    w = jnp.asarray(window)
+    m &= (w <= 0) | ((q_pos[:, None] - k_pos[None, :]) < w)
+    return m
+
+
+def _softcap(x, cap: float):
+    return cap * jnp.tanh(x / cap) if cap > 0 else x
+
+
+def _softcap_bwd(x, cap: float):
+    """d softcap(x) / dx evaluated at pre-cap logits x."""
+    if cap <= 0:
+        return jnp.ones_like(x)
+    t = jnp.tanh(x / cap)
+    return 1.0 - t * t
+
+
+def _flash_fwd_impl(q, k, v, *, causal, window, softcap, chunk_kv, q_offset):
+    """q [B,Sq,H,D], k/v [B,Sk,Hkv,D] -> (out [B,Sq,H,D], lse [B,H,Sq])."""
+    B, Sq, H, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    g = H // Hkv
+    scale = D ** -0.5
+    nk = Sk // chunk_kv
+
+    qf = (q * scale).astype(jnp.float32).transpose(0, 2, 1, 3)  # [B,H,Sq,D]
+    kc = k.astype(jnp.float32).transpose(0, 2, 1, 3).reshape(B, Hkv, nk, chunk_kv, D)
+    vc = v.astype(jnp.float32).transpose(0, 2, 1, 3).reshape(B, Hkv, nk, chunk_kv, D)
+    kc = jnp.moveaxis(kc, 2, 0)  # [nk, B, Hkv, bk, D]
+    vc = jnp.moveaxis(vc, 2, 0)
+
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def step(carry, inp):
+        m_i, l_i, acc = carry
+        j, kj, vj = inp
+        k_pos = j * chunk_kv + jnp.arange(chunk_kv)
+        # logits [B,H,Sq,bk]: query head h attends kv head h//g
+        kj_full = jnp.repeat(kj, g, axis=1)  # [B,H,bk,D]
+        vj_full = jnp.repeat(vj, g, axis=1)
+        logits = jnp.einsum("bhqd,bhkd->bhqk", qf, kj_full)
+        logits = _softcap(logits, softcap)
+        mask = _chunk_mask(q_pos, k_pos, causal, window)
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+
+        m_new = jnp.maximum(m_i, logits.max(-1))
+        p = jnp.exp(logits - m_new[..., None])
+        alpha = jnp.exp(m_i - m_new)
+        l_new = l_i * alpha + p.sum(-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum("bhqk,bhkd->bhqd", p, vj_full)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, D), jnp.float32)
+    (m, l, acc), _ = lax.scan(step, (m0, l0, a0), (jnp.arange(nk), kc, vc))
+
+    l_safe = jnp.maximum(l, 1e-30)
+    out = (acc / l_safe[..., None]).transpose(0, 2, 1, 3).astype(q.dtype)
+    lse = m + jnp.log(l_safe)  # [B,H,Sq]
+    return out, lse
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7)
+)
+def flash_attention(q, k, v, window, causal=True, softcap=0.0, chunk_kv=1024, q_offset=0):
+    """Memory-efficient attention.  q [B,Sq,H,D]; k,v [B,Sk,Hkv,D] -> [B,Sq,H,D].
+
+    ``window`` is a (possibly traced) int scalar, 0 = full attention.
+    ``q_offset`` is the absolute position of q[0] (chunked prefill support).
+    ``chunk_kv`` must divide Sk (callers pad; configs use aligned shapes).
+    """
+    out, _ = _flash_fwd_impl(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        chunk_kv=chunk_kv, q_offset=q_offset,
+    )
+    return out
+
+
+def _flash_fwd(q, k, v, window, causal, softcap, chunk_kv, q_offset):
+    out, lse = _flash_fwd_impl(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        chunk_kv=chunk_kv, q_offset=q_offset,
+    )
+    return out, (q, k, v, window, out, lse)
+
+
+def _flash_bwd(causal, softcap, chunk_kv, q_offset, res, dout):
+    q, k, v, window, out, lse = res
+    B, Sq, H, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    g = H // Hkv
+    scale = D ** -0.5
+    nk = Sk // chunk_kv
+
+    qf = q.astype(jnp.float32).transpose(0, 2, 1, 3)  # [B,H,Sq,D] (unscaled)
+    do = dout.astype(jnp.float32).transpose(0, 2, 1, 3)
+    of = out.astype(jnp.float32).transpose(0, 2, 1, 3)
+    delta = jnp.sum(do * of, axis=-1)  # [B,H,Sq]
+
+    kc = k.astype(jnp.float32).transpose(0, 2, 1, 3).reshape(B, Hkv, nk, chunk_kv, D)
+    vc = v.astype(jnp.float32).transpose(0, 2, 1, 3).reshape(B, Hkv, nk, chunk_kv, D)
+    kc = jnp.moveaxis(kc, 2, 0)
+    vc = jnp.moveaxis(vc, 2, 0)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def step(dq_acc, inp):
+        j, kj, vj = inp
+        k_pos = j * chunk_kv + jnp.arange(chunk_kv)
+        kj_full = jnp.repeat(kj, g, axis=1)  # [B,H,bk,D]
+        vj_full = jnp.repeat(vj, g, axis=1)
+        raw = jnp.einsum("bhqd,bhkd->bhqk", qf * scale, kj_full)
+        capped = _softcap(raw, softcap)
+        mask = _chunk_mask(q_pos, k_pos, causal, window)
+        capped_m = jnp.where(mask[None, None], capped, NEG_INF)
+        p = jnp.exp(capped_m - lse[..., None])  # [B,H,Sq,bk]
+
+        dv_full = jnp.einsum("bhqk,bhqd->bhkd", p, do)
+        dp = jnp.einsum("bhqd,bhkd->bhqk", do, vj_full)
+        dcap = p * (dp - delta[..., None])
+        draw = dcap * _softcap_bwd(raw, softcap) * scale
+        draw = jnp.where(mask[None, None], draw, 0.0)
+
+        dq_acc = dq_acc + jnp.einsum("bhqk,bhkd->bhqd", draw, kj_full)
+        dk_full = jnp.einsum("bhqk,bhqd->bhkd", draw, qf)
+        # fold query groups back onto kv heads
+        dk_j = dk_full.reshape(B, Hkv, g, chunk_kv, D).sum(2)
+        dv_j = dv_full.reshape(B, Hkv, g, chunk_kv, D).sum(2)
+        return dq_acc, (dk_j, dv_j)
+
+
+    dq0 = jnp.zeros((B, H, Sq, D), jnp.float32)
+    dq, (dk_c, dv_c) = lax.scan(step, dq0, (jnp.arange(nk), kc, vc))
+
+    dq = dq.transpose(0, 2, 1, 3).astype(q.dtype)
+    dk = jnp.moveaxis(dk_c, 0, 2).reshape(B, Hkv, Sk, D)
+    dk = jnp.swapaxes(dk, 1, 2).astype(k.dtype)
+    dv = jnp.moveaxis(dv_c, 0, 2).reshape(B, Hkv, Sk, D)
+    dv = jnp.swapaxes(dv, 1, 2).astype(v.dtype)
+    return dq, dk, dv, None  # no cotangent for the integer window
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+def attention_ref(q, k, v, window=0, causal=True, softcap=0.0, q_offset=0):
+    """Naive O(S^2) reference for tests."""
+    B, Sq, H, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    g = H // Hkv
+    kf = jnp.repeat(k.astype(jnp.float32), g, axis=2)
+    vf = jnp.repeat(v.astype(jnp.float32), g, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kf) * (D ** -0.5)
+    logits = _softcap(logits, softcap)
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(Sk)
+    mask = _chunk_mask(q_pos, k_pos, causal, window)
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vf).astype(q.dtype)

@@ -1,0 +1,119 @@
+"""Model configuration shared by all 10 assigned architectures."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.quant.policy import QuantPolicy
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int  # 0 for attention-free (mamba2)
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+
+    # MoE
+    num_experts: int = 0
+    experts_per_token: int = 0
+    num_shared_experts: int = 0
+    moe_capacity_factor: float = 1.25
+
+    # SSM (mamba2 / hymba)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv_width: int = 4
+    ssm_chunk: int = 256
+
+    # attention behaviour
+    sliding_window: int = 0  # 0 = full attention
+    alt_local_global: bool = False  # gemma2: even layers local SWA, odd global
+    logit_softcap: float = 0.0  # gemma2 final-logit softcap
+    attn_softcap: float = 0.0  # gemma2 attention-logit softcap
+
+    # multimodal stubs (frontends provide precomputed embeddings)
+    cross_attn_every: int = 0  # vlm: every k-th layer gets cross-attention
+    num_media_tokens: int = 0  # image patches / audio frames fed to cross-attn
+    media_d: int = 1408  # stub vision/audio encoder output width
+
+    rope_theta: float = 500000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+
+    quant: QuantPolicy = dataclasses.field(default_factory=QuantPolicy)
+
+    # implementation knobs (perf-relevant; see EXPERIMENTS.md §Perf)
+    attn_chunk_q: int = 512
+    attn_chunk_kv: int = 1024
+    remat: str = "block"  # none | block (checkpoint each layer in the scan)
+
+    def __post_init__(self):
+        if self.family != "ssm":
+            assert self.num_heads > 0 and self.num_heads % max(self.num_kv_heads, 1) == 0
+        if self.family == "moe":
+            assert self.num_experts > 1 and self.experts_per_token >= 1
+        if self.family in ("ssm", "hybrid"):
+            assert self.ssm_state > 0
+        if self.family == "vlm":
+            assert self.cross_attn_every > 0 and self.num_media_tokens > 0
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.num_heads)
+
+    @property
+    def q_heads_per_kv(self) -> int:
+        return self.num_heads // max(self.num_kv_heads, 1)
+
+    def with_(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # ---- parameter counting (roofline MODEL_FLOPS uses these) ----------------
+
+    def param_count(self) -> int:
+        d, dff, V, L = self.d_model, self.d_ff, self.vocab_size, self.num_layers
+        hd = self.resolved_head_dim if self.num_heads else 0
+        emb = V * d * (1 if self.tie_embeddings else 2)
+        attn = 0
+        if self.num_heads:
+            attn = d * (self.num_heads * hd) + 2 * d * (self.num_kv_heads * hd) + (self.num_heads * hd) * d
+        mlp = 3 * d * dff  # SwiGLU
+        per_layer = attn + mlp
+        if self.family == "moe":
+            expert = 3 * d * dff
+            per_layer = attn + (self.num_experts + self.num_shared_experts) * expert + d * self.num_experts
+        if self.family == "ssm":
+            din = self.ssm_expand * d
+            nh = din // self.ssm_head_dim
+            per_layer = d * (2 * din + 2 * self.ssm_state + nh) + din * d + nh + nh  # in/out proj + BC + dt + A + D
+        if self.family == "hybrid":
+            din = d
+            nh = din // self.ssm_head_dim
+            ssm = d * (2 * din + 2 * self.ssm_state + nh) + din * d + 2 * nh
+            per_layer = attn + ssm + mlp
+        total = emb + L * per_layer
+        if self.family == "vlm":
+            n_cross = L // self.cross_attn_every
+            total += n_cross * attn
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top-k + shared experts only)."""
+        if self.family != "moe":
+            return self.param_count()
+        d, dff, V, L = self.d_model, self.d_ff, self.vocab_size, self.num_layers
+        hd = self.resolved_head_dim
+        emb = V * d * (1 if self.tie_embeddings else 2)
+        attn = d * (self.num_heads * hd) + 2 * d * (self.num_kv_heads * hd) + (self.num_heads * hd) * d
+        expert = 3 * d * dff
+        k = self.experts_per_token + self.num_shared_experts
+        per_layer = attn + k * expert + d * self.num_experts
+        return int(emb + L * per_layer)

@@ -1,0 +1,70 @@
+"""Mixture-of-Experts layer: top-k token-choice routing with GShard-style
+grouped capacity dispatch — the shardable TPU formulation.
+
+Tokens are grouped by batch row (G = B groups); each group dispatches at most
+C = ceil(cf * k * S / E) tokens per expert through one-hot einsums, so under
+pjit the dispatch/combine contractions lower to all-to-alls, expert weights
+shard over the model axis on their leading [E] dim (EP), and groups shard
+over the data axis.  Supports DeepSeek/Kimi-style always-on shared experts.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.actx import constrain
+
+
+def moe_block(x, router_w, wi, wg, wo, shared, *, top_k: int, capacity_factor: float):
+    """x [B, S, d] -> ([B, S, d], aux_loss).
+
+    router_w [d, E]; wi/wg [E, d, f]; wo [E, f, d];
+    shared = None or (wi_s [d, fs], wg_s [d, fs], wo_s [fs, d]).
+    """
+    B, S, d = x.shape
+    E = router_w.shape[-1]
+
+    logits = x.astype(jnp.float32) @ router_w.astype(jnp.float32)  # [B, S, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)  # [B, S, k]
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    C = max(int(capacity_factor * top_k * S / E), 1)
+
+    # per-group position of each (token, slot) in its expert's capacity buffer
+    sel = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)  # [B, S, k, E]
+    flat = sel.reshape(B, S * top_k, E)
+    pos = (jnp.cumsum(flat, axis=1) * flat - 1).max(-1).reshape(B, S, top_k)
+    keep = (pos >= 0) & (pos < C)
+    pos_c = jnp.clip(pos, 0, C - 1)
+
+    cdt = x.dtype
+    d_e = sel.astype(cdt)  # [B, S, k, E]
+    d_c = jax.nn.one_hot(pos_c, C, dtype=cdt) * keep[..., None].astype(cdt)  # [B, S, k, C]
+    dispatch = constrain(jnp.einsum("bske,bskc->bsec", d_e, d_c), "B", None, "M", None)
+    combine = constrain(
+        jnp.einsum("bske,bskc->bsec", d_e * gate_vals[..., None].astype(cdt), d_c),
+        "B", None, "M", None,
+    )
+
+    xe = constrain(jnp.einsum("bsec,bsd->becd", dispatch, x), "B", "M", None, None)
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", xe, wg)) * jnp.einsum(
+        "becd,edf->becf", xe, wi
+    )
+    ye = constrain(jnp.einsum("becf,efd->becd", h, wo), "B", "M", None, None)
+    y = jnp.einsum("bsec,becd->bsd", combine, ye)  # [B, S, d]
+
+    if shared is not None:
+        wi_s, wg_s, wo_s = shared
+        y = y + (jax.nn.silu(x @ wg_s) * (x @ wi_s)) @ wo_s
+
+    aux = _load_balance_loss(probs.reshape(-1, E), gate_idx.reshape(-1, top_k), E, top_k)
+    return y, aux
+
+
+def _load_balance_loss(probs, gate_idx, E: int, top_k: int):
+    """Switch-style auxiliary load-balancing loss."""
+    me = probs.mean(0)  # [E] mean router prob
+    ce = jax.nn.one_hot(gate_idx, E).sum(1).mean(0) / top_k  # [E] routed fraction
+    return E * jnp.sum(me * ce)

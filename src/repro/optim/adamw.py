@@ -1,0 +1,104 @@
+"""AdamW with optionally takum-quantised moments.
+
+The optimizer state is the largest HBM surface in large-model training
+(2 x f32 per parameter).  Under the paper's uniform-format thesis the
+moments live in takum16/takum8 (+ per-tensor power-of-two scale, stochastic
+rounding on the re-encode to keep the update unbiased), cutting that surface
+2-8x — this is what lets the Kimi-K2 1T train_4k cell fit 512 v5e chips
+(EXPERIMENTS.md §Dry-run).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.policy import is_takum
+from repro.quant.qtensor import QTensor, dequantize, quantize
+
+
+class AdamWState(NamedTuple):
+    step: Any
+    m: Any  # pytree of arrays or QTensors
+    v: Any
+
+
+def _q(x, fmt, key):
+    if fmt == "f32":
+        return x.astype(jnp.float32)
+    if fmt == "bf16":
+        return x.astype(jnp.bfloat16)
+    return quantize(x, fmt, scaled=True, sr_key=key)
+
+
+def _dq(x):
+    if isinstance(x, QTensor):
+        return dequantize(x)
+    return x.astype(jnp.float32)
+
+
+def adamw_init(params, *, fmt: str = "f32") -> AdamWState:
+    def zero(p):
+        z = jnp.zeros_like(p, dtype=jnp.float32)
+        if fmt in ("f32", "bf16"):
+            return z.astype(jnp.float32 if fmt == "f32" else jnp.bfloat16)
+        # scaled=True to keep the QTensor pytree structure identical between
+        # init and update (update always carries a per-tensor scale)
+        return quantize(z, fmt, scaled=True)
+
+    return AdamWState(
+        step=jnp.int32(0),
+        m=jax.tree.map(zero, params),
+        v=jax.tree.map(zero, params),
+    )
+
+
+def adamw_update(
+    grads,
+    state: AdamWState,
+    params,
+    *,
+    lr,
+    fmt: str = "f32",
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    key: Optional[jax.Array] = None,
+):
+    """Returns (new_params, new_state).  ``fmt`` = moment storage format;
+    takum formats re-encode with stochastic rounding when ``key`` given."""
+    step = state.step + 1
+    c1 = 1.0 - b1**step.astype(jnp.float32)
+    c2 = 1.0 - b2**step.astype(jnp.float32)
+
+    leaves_g, treedef = jax.tree.flatten(grads)
+    leaves_m = treedef.flatten_up_to(state.m)
+    leaves_v = treedef.flatten_up_to(state.v)
+    leaves_p = treedef.flatten_up_to(params)
+
+    use_sr = key is not None and is_takum(fmt)
+    keys = (
+        jax.random.split(key, 2 * len(leaves_g))
+        if use_sr
+        else [None] * (2 * len(leaves_g))
+    )
+
+    new_p, new_m, new_v = [], [], []
+    for i, (g, m, v, p) in enumerate(zip(leaves_g, leaves_m, leaves_v, leaves_p)):
+        gf = g.astype(jnp.float32)
+        mf = b1 * _dq(m) + (1 - b1) * gf
+        vf = b2 * _dq(v) + (1 - b2) * gf * gf
+        update = (mf / c1) / (jnp.sqrt(vf / c2) + eps)
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (update + weight_decay * pf)
+        new_p.append(pf.astype(p.dtype))
+        new_m.append(_q(mf, fmt, keys[2 * i]))
+        new_v.append(_q(vf, fmt, keys[2 * i + 1]))
+
+    return (
+        jax.tree.unflatten(treedef, new_p),
+        AdamWState(step=step, m=jax.tree.unflatten(treedef, new_m), v=jax.tree.unflatten(treedef, new_v)),
+    )

@@ -1,0 +1,4 @@
+from .policy import QuantPolicy, FORMAT_BITS
+from .qtensor import QTensor, quantize, dequantize
+
+__all__ = ["QuantPolicy", "FORMAT_BITS", "QTensor", "quantize", "dequantize"]

@@ -1,0 +1,68 @@
+"""Per-surface numeric-format policy — the paper's thesis made configurable.
+
+The paper argues one tapered format (takum) can serve every low-precision
+surface that today uses a zoo of IEEE-derived formats.  ``QuantPolicy`` names
+each surface in the training/serving stack and assigns it a format:
+
+    surface      AVX10.2-era choice      takum-uniform choice
+    ---------    --------------------    --------------------
+    weights      bf16                    t16 (or t8 + scale)
+    kv_cache     bf16 / fp8              t8
+    grad_comm    f32 / bf16              t16 / t8 (+ stochastic rounding)
+    opt_state    f32                     t16 / t8 (+ stochastic rounding)
+    checkpoint   f32                     t16
+
+Format names: 'f32', 'bf16', 't8', 't16', 't32' (t* = linear takum).
+The *paper-faithful baseline* in EXPERIMENTS.md §Perf is the bf16 policy
+(status quo); the takum policies are the technique under study.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+FORMAT_BITS = {"f32": 32, "bf16": 16, "t8": 8, "t16": 16, "t32": 32}
+
+
+def is_takum(fmt: str) -> bool:
+    return fmt.startswith("t") and fmt[1:].isdigit()
+
+
+def takum_width(fmt: str) -> int:
+    assert is_takum(fmt), fmt
+    return int(fmt[1:])
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    weights: str = "bf16"  # storage format for linear/embedding weights
+    kv_cache: str = "bf16"  # serving KV cache
+    grad_comm: str = "f32"  # cross-pod gradient all-reduce wire format
+    opt_state: str = "f32"  # Adam moments
+    checkpoint: str = "f32"
+    activations: str = "bf16"  # compute dtype (IEEE: MXU native)
+    scale_tensors: bool = True  # rescale to RMS~1 before takum encode (taper sweet spot)
+    stochastic_rounding: bool = True  # for grad_comm / opt_state takum encodes
+
+    def __post_init__(self):
+        for f in (self.weights, self.kv_cache, self.grad_comm, self.opt_state, self.checkpoint):
+            assert f in FORMAT_BITS, f
+        assert self.activations in ("bf16", "f32")
+
+    def bytes_per_el(self, surface: str) -> float:
+        return FORMAT_BITS[getattr(self, surface)] / 8
+
+
+# Named policies used throughout benchmarks/EXPERIMENTS.md
+BF16_BASELINE = QuantPolicy()  # the AVX10.2-status-quo analogue
+TAKUM_UNIFORM = QuantPolicy(
+    weights="t16", kv_cache="t8", grad_comm="t16", opt_state="t16", checkpoint="t16"
+)
+TAKUM_AGGRESSIVE = QuantPolicy(
+    weights="t8", kv_cache="t8", grad_comm="t8", opt_state="t8", checkpoint="t16"
+)
+POLICIES = {
+    "bf16": BF16_BASELINE,
+    "takum": TAKUM_UNIFORM,
+    "takum8": TAKUM_AGGRESSIVE,
+}

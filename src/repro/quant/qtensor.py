@@ -1,0 +1,79 @@
+"""QTensor: a quantised-tensor pytree container (format + bits + scale).
+
+Takum's tapered precision is densest near |x| ~ 1, so ``quantize`` optionally
+rescales by a per-tensor power-of-two RMS estimate before encoding (scale is
+exact to reapply).  ``scale=None`` is the paper-faithful pure-format
+conversion (what Figure 2 measures).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.takum import takum_decode, takum_encode, takum_encode_sr
+from .policy import FORMAT_BITS, is_takum, takum_width
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class QTensor:
+    bits: Any  # packed patterns (uint8/16/32) or raw array for ieee formats
+    fmt: str  # 'f32' | 'bf16' | 't8' | 't16' | 't32'
+    scale: Optional[Any] = None  # power-of-two scalar (f32) or None
+
+    def tree_flatten(self):
+        return (self.bits, self.scale), self.fmt
+
+    @classmethod
+    def tree_unflatten(cls, fmt, leaves):
+        return cls(leaves[0], fmt, leaves[1])
+
+    @property
+    def shape(self):
+        return self.bits.shape
+
+    @property
+    def nbytes_per_el(self) -> float:
+        return FORMAT_BITS[self.fmt] / 8
+
+    def dequantize(self, dtype=jnp.float32):
+        return dequantize(self, dtype)
+
+
+def _pow2_scale(x):
+    """Nearest power-of-two to RMS(x): exactly invertible scaling."""
+    ms = jnp.mean(jnp.square(x.astype(jnp.float32)))
+    rms = jnp.sqrt(jnp.maximum(ms, 1e-30))
+    e = jnp.round(jnp.log2(rms))
+    return jnp.exp2(e).astype(jnp.float32)
+
+
+def quantize(x, fmt: str, *, scaled: bool = False, sr_key=None) -> QTensor:
+    """Quantise x into ``fmt``.  ``sr_key`` switches takum RNE -> stochastic."""
+    if fmt == "f32":
+        return QTensor(x.astype(jnp.float32), fmt)
+    if fmt == "bf16":
+        return QTensor(x.astype(jnp.bfloat16), fmt)
+    assert is_takum(fmt), fmt
+    n = takum_width(fmt)
+    scale = _pow2_scale(x) if scaled else None
+    xs = (x / scale) if scale is not None else x
+    if sr_key is not None:
+        bits = takum_encode_sr(xs.astype(jnp.float32), sr_key, n)
+    else:
+        bits = takum_encode(xs.astype(jnp.float32), n)
+    return QTensor(bits, fmt, scale)
+
+
+def dequantize(q: QTensor, dtype=jnp.float32):
+    if q.fmt in ("f32", "bf16"):
+        return q.bits.astype(dtype)
+    n = takum_width(q.fmt)
+    x = takum_decode(q.bits, n)
+    if q.scale is not None:
+        x = x * q.scale
+    return x.astype(dtype)

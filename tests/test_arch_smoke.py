@@ -1,0 +1,140 @@
+"""Per-architecture smoke tests: reduced configs, one forward + train-grad +
+prefill/decode consistency on CPU.  Asserts output shapes and no NaNs.
+
+The decode-consistency test is the strongest model-correctness check in the
+suite: teacher-forcing a sequence through prefill+decode_step must reproduce
+the full forward's logits position by position (exercises KV caching, RoPE
+offsets, SSM state carry, sliding windows and quantised caches together).
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models import transformer as T
+from repro.quant.policy import QuantPolicy
+
+ARCHS = configs.ARCHS
+
+
+def _batch(cfg, B=2, S=32, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["media"] = jnp.asarray(
+            rng.standard_normal((B, cfg.num_media_tokens, cfg.media_d)), jnp.float32
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg = configs.get_smoke(arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    logits, aux, _ = T.forward(cfg, params, batch["tokens"], media=batch.get("media"))
+    B, S = batch["tokens"].shape
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all()
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_grad_finite(arch):
+    cfg = configs.get_smoke(arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(1))
+    batch = _batch(cfg)
+
+    def loss(p):
+        l, _ = T.loss_fn(cfg, p, batch)
+        return l
+
+    l, g = jax.value_and_grad(loss)(params)
+    assert np.isfinite(float(l))
+    flat = jax.tree.leaves(g)
+    assert all(np.isfinite(np.asarray(x)).all() for x in flat)
+    # at least the embedding gets gradient signal
+    assert float(jnp.abs(g["embed"]).max()) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("kv_fmt", ["f32", "t16", "t8"])
+def test_prefill_decode_consistency(arch, kv_fmt):
+    """decode_step over tokens [S0:S] must match full-forward logits.
+
+    f32 cache: numerically tight.  takum caches quantise K/V, so logits
+    drift by quantisation noise (amplified by discrete MoE routing flips) —
+    we check rank agreement of the argmax instead.
+    """
+    cfg = configs.get_smoke(arch).with_(quant=QuantPolicy(kv_cache=kv_fmt, activations="f32"))
+    if cfg.family == "ssm" and kv_fmt != "f32":
+        pytest.skip("ssm has no KV cache (state quantisation tested separately)")
+    if cfg.family == "moe":
+        # capacity dropping depends on S (C = cf*k*S/E), so teacher-forcing can
+        # only match in the no-drop regime; the drop path is a training-time
+        # artifact exercised by the train smokes above.
+        cfg = cfg.with_(moe_capacity_factor=float(cfg.num_experts))
+    params = T.init_params(cfg, jax.random.PRNGKey(2))
+    B, S, S0 = 2, 16, 8
+    batch = _batch(cfg, B=B, S=S, seed=3)
+    tokens = batch["tokens"]
+    media = batch.get("media")
+
+    full_logits, _, _ = T.forward(cfg, params, tokens, media=media)
+    last, cache = T.prefill(cfg, params, tokens[:, :S0], media=media, cache_len=S)
+    np.testing.assert_allclose(
+        np.asarray(last), np.asarray(full_logits[:, S0 - 1]), rtol=2e-2, atol=2e-2
+    )
+
+    logits_steps = []
+    for t in range(S0, S):
+        lg, cache = T.decode_step(cfg, params, tokens[:, t], cache, media=media)
+        logits_steps.append(np.asarray(lg))
+    got = np.stack(logits_steps, axis=1)  # [B, S-S0, V]
+    want = np.asarray(full_logits[:, S0:])
+    if kv_fmt == "f32":
+        np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+    elif kv_fmt == "t16":
+        agree = (got.argmax(-1) == want.argmax(-1)).mean()
+        assert agree > 0.8, f"argmax agreement {agree:.2f} under {kv_fmt} cache"
+    else:  # t8: random tiny models have near-uniform logits; argmax is brittle.
+        corr = np.corrcoef(got.ravel(), want.ravel())[0, 1]
+        assert corr > 0.98, f"logit correlation {corr:.3f} under t8 cache"
+
+
+def test_param_counts_full_configs():
+    """Full (non-smoke) configs must hit their published parameter scales."""
+    approx = {
+        "llama3_8b": 8.0e9,
+        "llama3_2_3b": 3.2e9,
+        "gemma2_2b": 2.6e9,
+        "granite_34b": 34e9,
+        "mamba2_780m": 0.78e9,
+        "hymba_1_5b": 1.5e9,
+        "dbrx_132b": 132e9,
+        "kimi_k2_1t_a32b": 1.0e12,
+        "llama3_2_vision_90b": 80e9,  # text stack only (vision tower stubbed)
+        "musicgen_large": 3.3e9,
+    }
+    for arch, target in approx.items():
+        n = configs.get(arch).param_count()
+        assert 0.55 * target < n < 1.75 * target, (arch, n, target)
+
+
+def test_kimi_active_params():
+    cfg = configs.get("kimi_k2_1t_a32b")
+    active = cfg.active_param_count()
+    assert 20e9 < active < 50e9  # "a32b"
+
+
+def test_cells_grid():
+    live = list(configs.cells())
+    skipped = [c for c in configs.cells(include_skipped=True) if not c[2]]
+    assert len(live) + len(skipped) == 40
+    assert len(live) == 32  # 30 + 2 long-context (mamba2, hymba)
+    assert {a for a, s, r in skipped} == {
+        "musicgen_large", "kimi_k2_1t_a32b", "dbrx_132b", "gemma2_2b",
+        "llama3_8b", "llama3_2_3b", "granite_34b", "llama3_2_vision_90b",
+    }

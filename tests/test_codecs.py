@@ -1,0 +1,285 @@
+"""Codec unit + property tests: takum (jnp & numpy), posit, OFP8.
+
+These encode the format-level invariants the paper relies on:
+  * unique unsigned zero, single NaR
+  * negation == two's complement of the bit string
+  * bit patterns (as n-bit two's-complement ints) order like the values
+  * round-trip identity on representable values
+  * encode is a projection (idempotent round-trip)
+  * JAX codec == numpy float64 oracle
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ofp8, posit_np, takum, takum_np
+from repro.core.formats import FORMATS
+
+WIDTHS = (8, 12, 16, 24, 32)
+MODES = ("linear", "log")
+
+
+def _signed(bits, n):
+    bits = bits.astype(np.int64)
+    return np.where(bits >= 1 << (n - 1), bits - (1 << n), bits)
+
+
+# ---------------------------------------------------------------------------
+# numpy takum oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", WIDTHS)
+@pytest.mark.parametrize("mode", MODES)
+def test_takum_np_roundtrip_projection(n, mode):
+    rng = np.random.default_rng(n)
+    x = rng.standard_normal(4096) * np.exp(rng.uniform(-50, 50, 4096))
+    b = takum_np.encode(x, n, mode)
+    y = takum_np.decode(b, n, mode)
+    b2 = takum_np.encode(y, n, mode)
+    assert np.array_equal(b, b2), "encode(decode(encode(x))) must be stable"
+
+
+@pytest.mark.parametrize("n", WIDTHS)
+@pytest.mark.parametrize("mode", MODES)
+def test_takum_np_exhaustive_small(n, mode):
+    if n > 16:
+        pytest.skip("exhaustive only for n <= 16")
+    pats = np.arange(1 << n, dtype=np.uint64)
+    vals = takum_np.decode(pats, n, mode)
+    # unique zero / NaR
+    assert vals[0] == 0 and np.isnan(vals[1 << (n - 1)])
+    body = np.delete(np.arange(1 << n), [0, 1 << (n - 1)])
+    assert np.all(np.isfinite(vals[body])) and np.all(vals[body] != 0)
+    # strict monotonicity in two's-complement order
+    order = np.argsort(_signed(pats[body], n))
+    assert np.all(np.diff(vals[body][order]) > 0)
+    # negation = two's complement
+    negb = takum_np.encode(-vals[body], n, mode)
+    assert np.all((negb + pats[body]) & np.uint64((1 << n) - 1) == 0)
+    # decode(encode(v)) == v exactly (representable values round-trip)
+    rt = takum_np.decode(takum_np.encode(vals[body], n, mode), n, mode)
+    if mode == "linear":
+        assert np.array_equal(rt, vals[body])
+    else:  # log decode goes through exp2: allow 1-ulp-of-l slack
+        assert np.allclose(rt, vals[body], rtol=1e-12)
+
+
+def test_takum_np_known_values():
+    # 1.0 = 0 1 000 0...0 at every width
+    for n in WIDTHS:
+        assert takum_np.encode(np.array([1.0]), n)[0] == 1 << (n - 2)
+    # paper Figure 1: takum dynamic range nearly constant, ~2**+-254 region
+    assert takum_np.maxpos(12) == 2.0**254
+    # c=-255 with zero mantissa collides with the reserved 0 pattern, so
+    # minpos(12) (p=0) is 2**-254; wider takums reach 2**-255*(1+2**-p)
+    assert takum_np.minpos(12) == 2.0**-254
+    assert takum_np.minpos(16) == 2.0**-255 * (1 + 2.0**-4)
+    assert takum_np.maxpos(8) == 2.0**239  # truncated characteristic
+    assert takum_np.minpos(8) == 2.0**-239
+    # takum16 of 2.0: c=1 -> 0 1 001 0 0...0
+    assert takum_np.encode(np.array([2.0]), 16)[0] == 0b0100100000000000
+    # -1.0 is two's complement of 1.0's pattern
+    assert takum_np.encode(np.array([-1.0]), 16)[0] == (1 << 16) - (1 << 14)
+
+
+def test_takum_np_saturation():
+    # beyond maxpos saturates, never wraps to NaR
+    big = np.array([1e300, -1e300])
+    b = takum_np.encode(big, 8)
+    assert b[0] == 0x7F and b[1] == 0x81
+    tiny = np.array([1e-300, -1e-300])
+    b = takum_np.encode(tiny, 8)
+    assert b[0] == 0x01 and b[1] == 0xFF
+
+
+@given(
+    st.floats(
+        allow_nan=False, allow_infinity=False, allow_subnormal=True, width=64,
+        min_value=None, max_value=None,
+    )
+)
+@settings(max_examples=300, deadline=None)
+def test_takum_np_hypothesis_roundtrip_error_bound(x):
+    """Linear takum16 relative error <= 2**-p at the value's precision level."""
+    if x == 0 or not (takum_np.minpos(16) <= abs(x) <= takum_np.maxpos(16)):
+        return  # saturation region: error bound does not apply
+    b = takum_np.encode(np.array([x]), 16)
+    y = takum_np.decode(b, 16)[0]
+    _, c, _, p = takum_np._decode_fields(b, 16)
+    rel = abs(y - x) / abs(x)
+    assert rel <= 2.0 ** -float(p[0])  # half-ulp of 1+f scaled by (1+f) >= 1
+
+
+# ---------------------------------------------------------------------------
+# JAX takum codec vs oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", (8, 16))
+def test_takum_jnp_decode_exhaustive_vs_oracle(n):
+    pats = np.arange(1 << n, dtype=np.uint64)
+    ref = takum_np.decode(pats, n, "linear")
+    got = np.asarray(takum.takum_decode(jnp.asarray(pats.astype(np.uint32)), n))
+    fin = np.isfinite(ref) & (ref != 0)
+    in_rng = fin & (np.abs(ref) <= 3.4028235e38) & (np.abs(ref) >= 2.0**-126)
+    assert np.array_equal(got[in_rng], ref[in_rng].astype(np.float32))
+    assert got[0] == 0 and np.isnan(got[1 << (n - 1)])
+    # f32-bit-assembling kernel decode agrees everywhere in range
+    fb = np.asarray(
+        takum.takum_decode_f32bits(jnp.asarray(pats.astype(np.uint32)), n)
+    ).view(np.float32)
+    assert np.array_equal(fb[in_rng], ref[in_rng].astype(np.float32))
+
+
+@pytest.mark.parametrize("n", (8, 16, 32))
+@pytest.mark.parametrize("mode", MODES)
+def test_takum_jnp_encode_matches_oracle(n, mode):
+    rng = np.random.default_rng(7 * n)
+    x = (rng.standard_normal(20000) * np.exp(rng.uniform(-30, 30, 20000))).astype(np.float32)
+    x = np.concatenate([x, [0.0, -0.0, np.inf, -np.inf, np.nan, 1.0, -1.0]]).astype(np.float32)
+    e_np = takum_np.encode(x.astype(np.float64), n, mode).astype(np.uint32)
+    e_jx = np.asarray(takum.takum_encode(jnp.asarray(x), n, mode=mode, packed=False))
+    if mode == "linear":
+        assert np.array_equal(e_np, e_jx)
+    else:
+        # log encode computes l = 2 ln x in f32 (jnp) vs f64 (oracle): the
+        # code-space difference is bounded by the f32 log error over the code
+        # granularity 2**-p (n<=16: p<=11 -> at most 1 code at ties; n=32:
+        # p<=27 -> up to ~2**6 codes for large |l|).  See takum.py docstring.
+        diff = np.abs(e_np.astype(np.int64) - e_jx.astype(np.int64))
+        if n <= 16:
+            assert diff.max() <= 1 and (diff == 1).mean() < 1e-3
+        else:
+            assert diff.max() <= 64
+
+
+@pytest.mark.parametrize("n", (8, 16))
+def test_takum_jnp_encode_idempotent_all_patterns(n):
+    pats = np.arange(1 << n, dtype=np.uint64)
+    ref = takum_np.decode(pats, n, "linear")
+    fin = np.isfinite(ref) & (ref != 0)
+    ok = fin & (np.abs(ref) <= 3.4e38) & (np.abs(ref) >= 2.0**-126)
+    enc = np.asarray(
+        takum.takum_encode(jnp.asarray(ref[ok].astype(np.float32)), n, packed=False)
+    )
+    assert np.array_equal(enc, pats[ok].astype(np.uint32))
+
+
+def test_takum_sortable_int_orders_values():
+    pats = np.arange(1 << 16, dtype=np.uint32)
+    keys = np.asarray(takum.sortable_int(jnp.asarray(pats), 16))
+    vals = takum_np.decode(pats.astype(np.uint64), 16)
+    body = np.isfinite(vals)
+    order = np.argsort(keys[body], kind="stable")
+    sv = vals[body][order]
+    assert np.all(np.diff(sv) > 0)
+
+
+def test_takum_stochastic_rounding_unbiased():
+    x = jnp.full((100000,), 1.0 + 2.0**-9, dtype=jnp.float32)
+    enc = takum.takum_encode_sr(x, jax.random.PRNGKey(0), 8)
+    dec = np.asarray(takum.takum_decode(enc, 8))
+    # takum8 neighbours of 1.001953125 are 1.0 and 1.125 (p=3 at c=0... p=3)
+    assert abs(dec.mean() - float(x[0])) < 2e-3
+    assert set(np.unique(dec)).issubset({1.0, 1.0 + 2.0**-3})
+
+
+def test_takum_storage_dtypes():
+    assert takum.takum_encode(jnp.ones(4), 8).dtype == jnp.uint8
+    assert takum.takum_encode(jnp.ones(4), 16).dtype == jnp.uint16
+    assert takum.takum_encode(jnp.ones(4), 32).dtype == jnp.uint32
+
+
+# ---------------------------------------------------------------------------
+# posit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", (8, 16, 32))
+def test_posit_exhaustive_or_sampled(n):
+    if n <= 16:
+        pats = np.arange(1 << n, dtype=np.uint64)
+    else:
+        pats = np.random.default_rng(0).integers(0, 1 << n, 20000, dtype=np.uint64)
+        pats = np.concatenate(
+            [pats, np.array([0, 1 << (n - 1), 1, (1 << (n - 1)) - 1], dtype=np.uint64)]
+        )
+    vals = posit_np.decode(pats, n)
+    body = ~((pats & np.uint64((1 << n) - 1)) == 0) & ~(
+        (pats & np.uint64((1 << n) - 1)) == np.uint64(1 << (n - 1))
+    )
+    assert np.all(np.isfinite(vals[body]))
+    rt = posit_np.encode(vals[body], n)
+    assert np.array_equal(rt, pats[body] & np.uint64((1 << n) - 1))
+    # monotone
+    order = np.argsort(_signed(pats[body], n))
+    assert np.all(np.diff(vals[body][order]) > 0)
+
+
+def test_posit_standard_values():
+    # posit standard: 1.0 -> 0x40.., maxpos = useed**(n-2), es=2 -> useed=16
+    for n in (8, 16, 32):
+        assert posit_np.encode(np.array([1.0]), n)[0] == 1 << (n - 2)
+        assert posit_np.maxpos(n) == 16.0 ** (n - 2)
+        assert posit_np.minpos(n) == 16.0 ** -(n - 2)
+
+
+# ---------------------------------------------------------------------------
+# OFP8
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fmt", ("e4m3", "e5m2"))
+def test_ofp8_jnp_matches_ml_dtypes_exhaustive_decode(fmt):
+    pats = np.arange(256, dtype=np.uint8)
+    ref = ofp8.decode_np(pats, fmt)
+    got = np.asarray(ofp8.decode(jnp.asarray(pats), fmt))
+    both_nan = np.isnan(ref) & np.isnan(got)
+    assert np.array_equal(ref[~both_nan].astype(np.float32), got[~both_nan])
+
+
+@pytest.mark.parametrize("fmt", ("e4m3", "e5m2"))
+def test_ofp8_jnp_encode_matches_ml_dtypes(fmt):
+    rng = np.random.default_rng(5)
+    x = (rng.standard_normal(30000) * np.exp(rng.uniform(-15, 15, 30000))).astype(np.float32)
+    x = np.concatenate([x, [0.0, -0.0, 448.0, 449.0, 464.0, -464.0, 57344.0, 1e30, np.inf, np.nan]]).astype(np.float32)
+    ref = ofp8.encode_np(x.astype(np.float64), fmt)
+    got = np.asarray(ofp8.encode(jnp.asarray(x), fmt))
+    # compare as decoded values (NaN payloads may differ)
+    rv = ofp8.decode_np(ref, fmt)
+    gv = ofp8.decode_np(got, fmt)
+    both_nan = np.isnan(rv) & np.isnan(gv)
+    assert np.array_equal(rv[~both_nan], gv[~both_nan]), (
+        np.where(~both_nan & (rv != gv))[0][:10], x[~both_nan & (rv != gv)][:10])
+
+
+def test_ofp8_spec_anchors():
+    assert FORMATS["ofp8_e4m3"].maxpos == 448.0
+    assert FORMATS["ofp8_e5m2"].maxpos == 57344.0
+    # e4m3 has no inf: inf encodes to NaN pattern
+    enc = np.asarray(ofp8.encode(jnp.asarray([np.inf], dtype=jnp.float32), "e4m3"))
+    assert (enc[0] & 0x7F) == 0x7F
+
+
+# ---------------------------------------------------------------------------
+# format registry (Figure 1 anchors)
+# ---------------------------------------------------------------------------
+
+
+def test_dynamic_ranges_match_paper_figure1():
+    from repro.core.formats import dynamic_range_decades as dr
+
+    # takum: near-constant huge range at every width — the paper's headline
+    assert dr(FORMATS["takum8"]) > 140
+    assert dr(FORMATS["takum16"]) > 150
+    assert dr(FORMATS["takum32"]) > 150
+    # IEEE formats collapse at low widths
+    assert dr(FORMATS["ofp8_e4m3"]) < 10
+    assert dr(FORMATS["ofp8_e5m2"]) < 15
+    assert dr(FORMATS["float16"]) < 15
+    # posit range grows with n but is far below takum at 8 bits
+    assert dr(FORMATS["posit8"]) < dr(FORMATS["takum8"]) / 4

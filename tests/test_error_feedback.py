@@ -1,0 +1,67 @@
+"""Error-feedback compressed reduction: accumulated error stays bounded and
+a toy distributed SGD converges at the uncompressed rate (beyond-paper lever,
+EXPERIMENTS.md §Perf C)."""
+
+import json
+import os
+import subprocess
+import sys
+
+_SRC = os.path.join(os.path.dirname(__file__), "../src")
+
+
+def _run(child: str, timeout=500) -> dict:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = _SRC
+    res = subprocess.run([sys.executable, "-c", child], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    assert res.returncode == 0, (res.stdout[-2000:], res.stderr[-3000:])
+    return json.loads(res.stdout.strip().splitlines()[-1])
+
+
+def test_error_feedback_beats_plain_t8_over_steps():
+    out = _run("""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import numpy as np
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.dist.collectives import compressed_psum
+from repro.dist.error_feedback import ef_init, ef_compressed_psum
+
+mesh = jax.make_mesh((8,), ("pod",))
+rng = np.random.default_rng(0)
+STEPS, SHAPE = 30, (8, 128)
+
+gs = jnp.asarray(rng.standard_normal((STEPS,) + SHAPE).astype(np.float32))
+exact_total = np.asarray(gs).sum(1).sum(0)  # sum over workers, then steps
+
+def run_plain(gs):
+    def step(acc, g):
+        return acc + compressed_psum(g, "pod", "t8")[0], None
+    acc0 = jax.lax.pvary(jnp.zeros(SHAPE[1:], jnp.float32), ("pod",))
+    acc, _ = jax.lax.scan(step, acc0, gs)
+    return jax.lax.pmean(acc, "pod")
+
+def run_ef(gs):
+    def step(carry, g):
+        acc, st = carry
+        r, st = ef_compressed_psum(g, st, "pod", "t8")
+        return (acc + r[0], st), None
+    acc0 = jax.lax.pvary(jnp.zeros(SHAPE[1:], jnp.float32), ("pod",))
+    (acc, _), _ = jax.lax.scan(step, (acc0, ef_init(gs[0])), gs)
+    return jax.lax.pmean(acc, "pod")
+
+sm_plain = jax.jit(jax.shard_map(run_plain, mesh=mesh, in_specs=P(None, "pod", None),
+                                 out_specs=P()))
+sm_ef = jax.jit(jax.shard_map(run_ef, mesh=mesh, in_specs=P(None, "pod", None),
+                              out_specs=P()))
+rms = float(np.sqrt((np.asarray(gs) ** 2).mean())) * np.sqrt(STEPS * SHAPE[0])
+e_plain = float(np.abs(np.asarray(sm_plain(gs)) - exact_total).max()) / rms
+e_ef = float(np.abs(np.asarray(sm_ef(gs)) - exact_total).max()) / rms
+print(json.dumps({"plain": e_plain, "ef": e_ef}))
+""")
+    # EF keeps the *accumulated* error bounded; plain t8 error grows ~sqrt(T)
+    assert out["ef"] < out["plain"] * 0.7, out
+    assert out["ef"] < 0.1, out

@@ -1,0 +1,167 @@
+"""Training-substrate tests: optimizer (incl. takum moments), data
+determinism, checkpoint/restart drills, straggler reassignment."""
+
+import os
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.data import SyntheticLM
+from repro.optim import adamw_init, adamw_update
+from repro.train import CheckpointManager, TrainLoop, TrainLoopConfig, reassign_shards
+
+
+# ----------------------------------------------------------------- optimizer
+
+
+def _quadratic_problem():
+    target = jnp.asarray(np.random.default_rng(0).standard_normal((32, 16)), jnp.float32)
+    params = {"w": jnp.zeros((32, 16), jnp.float32)}
+
+    def loss(p):
+        return jnp.mean((p["w"] - target) ** 2)
+
+    return params, loss, target
+
+
+@pytest.mark.parametrize("fmt", ["f32", "t16", "t8"])
+def test_adamw_converges_with_quantised_moments(fmt):
+    params, loss, target = _quadratic_problem()
+    state = adamw_init(params, fmt=fmt)
+    key = jax.random.PRNGKey(0)
+    l0 = float(loss(params))
+    for i in range(150):
+        key, k = jax.random.split(key)
+        g = jax.grad(loss)(params)
+        params, state = adamw_update(
+            g, state, params, lr=3e-2, fmt=fmt, weight_decay=0.0, key=k
+        )
+    l1 = float(loss(params))
+    # quantised moments must not break convergence (paper's uniform-format
+    # claim applied to optimizer state)
+    assert l1 < 0.05 * l0, (fmt, l0, l1)
+
+
+def test_adamw_t16_state_is_small():
+    params = {"w": jnp.zeros((64, 64), jnp.float32)}
+    st = adamw_init(params, fmt="t16")
+    assert st.m["w"].bits.dtype == jnp.uint16
+
+
+# ----------------------------------------------------------------------- data
+
+
+def test_data_deterministic_and_shardable():
+    pipe = SyntheticLM(vocab_size=512, seq_len=64, global_batch=8, seed=1)
+    b1 = pipe.batch(10)
+    b2 = pipe.batch(10)
+    assert np.array_equal(np.asarray(b1["tokens"]), np.asarray(b2["tokens"]))
+    # different steps differ
+    b3 = pipe.batch(11)
+    assert not np.array_equal(np.asarray(b1["tokens"]), np.asarray(b3["tokens"]))
+    # shards partition the batch deterministically
+    s0 = pipe.batch(5, shard=0, num_shards=2)["tokens"]
+    s1 = pipe.batch(5, shard=1, num_shards=2)["tokens"]
+    assert s0.shape == (4, 64) and s1.shape == (4, 64)
+    assert not np.array_equal(np.asarray(s0), np.asarray(s1))
+
+
+def test_data_markov_structure_learnable():
+    """Transition structure => entropy well below log(V)."""
+    pipe = SyntheticLM(vocab_size=256, seq_len=128, global_batch=16, seed=2, noise=0.0)
+    toks = np.asarray(pipe.batch(0)["tokens"])
+    # successor sets are small: count distinct next-tokens per token
+    succ = {}
+    for row in toks:
+        for a, b in zip(row[:-1], row[1:]):
+            succ.setdefault(int(a), set()).add(int(b))
+    avg = np.mean([len(v) for v in succ.values()])
+    assert avg <= pipe.branching + 0.5
+
+
+# ----------------------------------------------------------------- checkpoint
+
+
+@pytest.mark.parametrize("fmt", ["f32", "t16"])
+def test_checkpoint_roundtrip(tmp_path, fmt):
+    mgr = CheckpointManager(str(tmp_path), fmt=fmt, keep=2)
+    tree = {
+        "w": jnp.asarray(np.random.default_rng(0).standard_normal((8, 8)), jnp.float32),
+        "step": jnp.int32(7),
+        "nested": {"b": jnp.ones((3,), jnp.float32)},
+    }
+    mgr.save(3, tree, blocking=True)
+    assert mgr.latest_step() == 3
+    back = mgr.restore(3, tree)
+    if fmt == "f32":
+        np.testing.assert_array_equal(np.asarray(tree["w"]), back["w"])
+    else:  # takum16 round-trip: quantisation error bounded by taper
+        np.testing.assert_allclose(np.asarray(tree["w"]), back["w"], rtol=2e-3)
+    assert back["step"] == 7  # integers stored raw
+
+
+def test_checkpoint_gc_and_async(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"w": jnp.ones((4,), jnp.float32)}
+    for s in (1, 2, 3, 4):
+        mgr.save(s, tree)
+    mgr.wait()
+    assert sorted(mgr.all_steps()) == [3, 4]
+
+
+def test_trainloop_resume_bitexact(tmp_path):
+    """Crash at step 7, restart, and the final state must equal an
+    uninterrupted run (deterministic data + checkpointed state)."""
+
+    def make_loop(fail_at=None, d=None):
+        pipe = SyntheticLM(vocab_size=64, seq_len=8, global_batch=4, seed=3)
+
+        def init_state():
+            return {"w": jnp.zeros((64,), jnp.float32), "n": jnp.int32(0)}
+
+        @jax.jit
+        def step_fn(state, batch):
+            counts = jnp.bincount(batch["tokens"].reshape(-1), length=64).astype(jnp.float32)
+            return (
+                {"w": state["w"] + counts, "n": state["n"] + 1},
+                {"sum": counts.sum()},
+            )
+
+        def failure_hook(step):
+            if fail_at is not None and step == fail_at:
+                raise RuntimeError("injected failure")
+
+        cfg = TrainLoopConfig(total_steps=12, ckpt_every=5, ckpt_dir=str(d), log_every=100)
+        return TrainLoop(cfg, step_fn, lambda s: pipe.batch(s), init_state, failure_hook)
+
+    d1 = tmp_path / "a"
+    ref = make_loop(d=d1).run()
+
+    d2 = tmp_path / "b"
+    crashing = make_loop(fail_at=7, d=d2)
+    with pytest.raises(RuntimeError):
+        crashing.run()
+    resumed = make_loop(d=d2).run()
+    np.testing.assert_array_equal(np.asarray(ref["w"]), np.asarray(resumed["w"]))
+    assert int(resumed["n"]) == 12
+
+
+# ----------------------------------------------------------------- stragglers
+
+
+def test_reassign_shards_covers_all():
+    owners = reassign_shards(8, healthy=[0, 2, 3, 5, 6, 7])
+    covered = sorted(s for ss in owners.values() for s in ss)
+    assert covered == list(range(8))
+    # healthy workers keep their own shard
+    for h, ss in owners.items():
+        assert h in ss
+    # deterministic
+    assert owners == reassign_shards(8, healthy=[0, 2, 3, 5, 6, 7])
+
+
+def test_reassign_single_survivor():
+    owners = reassign_shards(4, healthy=[2])
+    assert owners == {2: [2, 0, 1, 3]}
