@@ -45,6 +45,14 @@ print(json.dumps(out))
 
 
 def run():
+    # the child subprocess cannot surface the stub's NotImplementedError
+    # cleanly, so detect it up front (benchmarks.run reports SKIP)
+    from repro.dist import collectives
+
+    if getattr(collectives, "IS_STUB", False):
+        raise NotImplementedError(
+            "repro.dist.collectives is a stub; compressed-psum bench pending"
+        )
     os.makedirs(RESULTS, exist_ok=True)
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "../src")

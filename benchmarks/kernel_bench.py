@@ -1,74 +1,255 @@
-"""Kernel microbenches: takum codec / dequant-matmul / decode-attention.
+"""Kernel microbenches: takum codec / dequant-matmul + persistent JSON record.
 
 On this CPU container the Pallas kernels execute in interpret mode, so wall
 times measure the *reference semantics*, not TPU performance; the TPU-relevant
-output is the analytic HBM-traffic model per format (the roofline memory-term
-input) plus jitted-jnp codec throughput as a sanity floor.
+outputs are (a) the A/B between the two in-kernel decode implementations
+("bits" = branch-free integer decode vs "lut" = table gather) measured on the
+same harness, and (b) the analytic HBM-traffic model per format (the roofline
+memory-term input).
+
+``--json`` writes ``BENCH_kernels.json`` at the repo root: the perf
+trajectory baseline every future perf PR is judged against.  ``--smoke``
+shrinks sizes/reps for CI.
+
+    PYTHONPATH=src python -m benchmarks.kernel_bench [--smoke] [--json]
 """
 
 from __future__ import annotations
 
+import json
 import os
+import statistics
+import sys
 import time
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.takum import takum_decode, takum_encode
-from repro.kernels import ref
+from repro.core.takum import takum_encode
+from repro.kernels.common import decode_takum_f32, encode_takum_from_f32
+from repro.kernels.lut import (
+    decode_table_operand,
+    decode_takum_lut,
+    encode8_table_operands,
+    encode_takum8_lut,
+)
+from repro.kernels.takum_matmul import takum_matmul
 
-RESULTS = os.path.join(os.path.dirname(__file__), "results")
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RESULTS = os.path.join(os.path.dirname(os.path.abspath(__file__)), "results")
+BENCH_JSON = os.path.join(REPO_ROOT, "BENCH_kernels.json")
+# smoke runs (CI) write here so they never clobber the committed full-size
+# baseline that future perf PRs are judged against
+BENCH_JSON_SMOKE = os.path.join(REPO_ROOT, "BENCH_kernels.smoke.json")
 
 
-def _time(f, *args, reps=5):
-    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else jax.block_until_ready(f(*args))
-    t0 = time.perf_counter()
-    for _ in range(reps):
+def bench_json_path(smoke: bool) -> str:
+    return BENCH_JSON_SMOKE if smoke else BENCH_JSON
+
+# (M, K, N): MXU-aligned and deliberately non-aligned (prime-ish) shapes —
+# the padded-grid path must not fall off a cliff
+MM_SHAPES = [
+    (512, 512, 512),
+    (256, 1024, 256),
+    (509, 517, 129),  # non-aligned: padded edge tiles
+    (100, 60, 36),  # tiny + non-aligned (old _tile degraded this to 1-wide blocks)
+]
+MM_SHAPES_SMOKE = [(256, 256, 256), (100, 60, 36)]
+
+
+def _time(f, *args, reps=5, warmup=1):
+    """Median microseconds per call; warms up (compiles) before timing.
+
+    ``jax.block_until_ready`` handles arbitrary pytrees, so tuple-returning
+    benches need no special casing (the old version called f twice per warmup
+    and never blocked on tuple results).  Median, not mean: this container's
+    CPU timings have heavy-tailed noise.
+    """
+    for _ in range(warmup):
         jax.block_until_ready(f(*args))
-    return (time.perf_counter() - t0) / reps * 1e6
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(f(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return statistics.median(ts)
 
 
-def hbm_model(rows: int, cols: int) -> list[str]:
+def hbm_model(rows: int, cols: int) -> dict:
     """Bytes to stream a [rows, cols] weight/KV tile per format (the paper's
     memory-wall argument quantified for the VDPPT dequant path)."""
+    return {fmt: rows * cols * bpe for fmt, bpe in
+            [("f32", 4), ("bf16", 2), ("takum16", 2), ("takum8", 1)]}
+
+
+def bench_decode(smoke: bool) -> list[dict]:
+    """Decode throughput, both impls, in two execution modes.
+
+    ``op_dispatch`` (headline): eager per-op execution, the interpret-style
+    harness — cost tracks the *instruction count* of the decode body (~40
+    integer ops for "bits" vs one gather for "lut"), which is the quantity
+    that maps to TPU VPU issue slots.  ``fused``: one jitted XLA kernel —
+    on CPU, LLVM vectorises the whole bit chain so the two impls converge;
+    recorded as the sanity floor.  See DESIGN.md §3.
+    """
     out = []
-    for fmt, bpe in [("f32", 4), ("bf16", 2), ("takum16", 2), ("takum8", 1)]:
-        out.append(f"{fmt}:{rows * cols * bpe / 1e6:.1f}MB")
+    rng = np.random.default_rng(0)
+    for n in (8, 16):
+        tab = decode_table_operand(n)
+        modes = {
+            "op_dispatch": {
+                "elems": 1 << 19 if smoke else 1 << 20,
+                "reps": 3 if smoke else 7,
+                "bits": lambda b, n=n: decode_takum_f32(b, n),
+                "lut": lambda b, tab=tab: decode_takum_lut(tab, b),
+            },
+            "fused": {
+                "elems": 1 << 20 if smoke else 1 << 22,
+                "reps": 5 if smoke else 11,
+                "bits": jax.jit(lambda b, n=n: decode_takum_f32(b, n)),
+                "lut": jax.jit(lambda b, tab=tab: decode_takum_lut(tab, b)),
+            },
+        }
+        for mode, cfg in modes.items():
+            elems = cfg["elems"]
+            bits = jnp.asarray(
+                rng.integers(0, 1 << n, size=elems).astype({8: np.uint8, 16: np.uint16}[n])
+            )
+            for impl in ("bits", "lut"):
+                us = _time(cfg[impl], bits, reps=cfg["reps"])
+                out.append({
+                    "op": "decode", "mode": mode, "n": n, "impl": impl,
+                    "elems": elems, "us": round(us, 1),
+                    "melem_s": round(elems / us, 1),
+                })
     return out
 
 
-def run():
+def bench_encode(smoke: bool) -> list[dict]:
+    """Element-wise encode throughput: bit-twiddle everywhere, LUT for takum8."""
+    elems = (1 << 20) if smoke else (1 << 22)
+    reps = 3 if smoke else 10
+    rng = np.random.default_rng(1)
+    x = jnp.asarray((rng.standard_normal(elems) * 2.0).astype(np.float32))
+    meta, thr = encode8_table_operands()
+    out = []
+    impls = {
+        8: {
+            "bits": jax.jit(lambda v: encode_takum_from_f32(v, 8)),
+            "lut": jax.jit(lambda v: encode_takum8_lut(v, meta, thr)),
+        },
+        16: {"bits": jax.jit(lambda v: encode_takum_from_f32(v, 16))},
+    }
+    for n, by_impl in impls.items():
+        for impl, f in by_impl.items():
+            us = _time(f, x, reps=reps)
+            out.append({
+                "op": "encode", "n": n, "impl": impl, "elems": elems,
+                "us": round(us, 1), "melem_s": round(elems / us, 1),
+            })
+    return out
+
+
+def bench_matmul(smoke: bool) -> list[dict]:
+    """Dequant-matmul GFLOP/s for both decode impls (pallas, interpret on CPU)."""
+    shapes = MM_SHAPES_SMOKE if smoke else MM_SHAPES
+    reps = 2 if smoke else 5
+    rng = np.random.default_rng(2)
+    out = []
+    for M, K, N in shapes:
+        x = jnp.asarray(rng.standard_normal((M, K)).astype(np.float32))
+        wb = takum_encode(jnp.asarray((rng.standard_normal((K, N)) * 0.2).astype(np.float32)), 8)
+        flops = 2 * M * K * N
+        aligned = all(d % 128 == 0 for d in (M, K, N))
+        for impl in ("bits", "lut"):
+            f = lambda a, b, impl=impl: takum_matmul(a, b, 8, decode_impl=impl)
+            us = _time(f, x, wb, reps=reps)
+            out.append({
+                "op": "dequant_matmul", "n": 8, "impl": impl,
+                "M": M, "K": K, "N": N, "aligned": aligned,
+                "us": round(us, 1), "gflop_s": round(flops / us / 1e3, 2),
+            })
+    return out
+
+
+def run(smoke: bool = False) -> dict:
+    decode = bench_decode(smoke)
+    encode = bench_encode(smoke)
+    matmul = bench_matmul(smoke)
+
+    def _melem(rows, n, impl, mode):
+        return next(
+            r["melem_s"] for r in rows
+            if r["n"] == n and r["impl"] == impl and r.get("mode", mode) == mode
+        )
+
+    def _speedups(mode):
+        return {
+            f"takum{n}": round(
+                _melem(decode, n, "lut", mode) / _melem(decode, n, "bits", mode), 2
+            )
+            for n in (8, 16)
+        }
+
+    report = {
+        "schema": "bench_kernels/v1",
+        "backend": jax.default_backend(),
+        "interpret_mode": jax.default_backend() == "cpu",
+        "smoke": smoke,
+        "decode": decode,
+        "encode": encode,
+        "matmul": matmul,
+        # headline A/B: interpret-style (per-op) harness — tracks instruction
+        # count, the TPU-relevant quantity; "fused" = XLA-CPU-fused floor
+        "decode_speedup_lut_vs_bits": _speedups("op_dispatch"),
+        "decode_speedup_lut_vs_bits_fused": _speedups("fused"),
+        "hbm_model_bytes_1024x1024": hbm_model(1024, 1024),
+    }
+    return report
+
+
+def emit(report: dict, write_json: bool) -> None:
     os.makedirs(RESULTS, exist_ok=True)
-    rows = []
-    x = jnp.asarray(np.random.default_rng(0).standard_normal((1024, 1024)), jnp.float32)
-    for n in (8, 16):
-        enc = jax.jit(lambda v, n=n: takum_encode(v, n))
-        us = _time(enc, x)
-        rows.append(("codec_encode_jnp", n, us, f"{x.size / (us / 1e6) / 1e6:.0f} Melem/s"))
-        bits = takum_encode(x, n)
-        dec = jax.jit(lambda b, n=n: takum_decode(b, n))
-        us = _time(dec, bits)
-        rows.append(("codec_decode_jnp", n, us, f"{x.size / (us / 1e6) / 1e6:.0f} Melem/s"))
-
-    w8 = takum_encode(jnp.asarray(np.random.default_rng(1).standard_normal((1024, 512)), jnp.float32), 8)
-    mm = jax.jit(lambda a, b: ref.takum_matmul_ref(a, b, 8))
-    us = _time(mm, x, w8)
-    flops = 2 * 1024 * 1024 * 512
-    rows.append(("dequant_matmul_ref", 8, us, f"{flops / (us / 1e6) / 1e9:.1f} GFLOP/s-cpu"))
-
-    rows.append(("hbm_bytes_1024x1024_tile", 0, 0.0, "|".join(hbm_model(1024, 1024))))
-
     with open(os.path.join(RESULTS, "kernels.csv"), "w") as fh:
         fh.write("name,n,us_per_call,derived\n")
-        for r in rows:
-            fh.write(",".join(str(v) for v in r) + "\n")
-    return rows
+        for row in report["decode"] + report["encode"]:
+            mode = row.get("mode", "fused")
+            fh.write(
+                f"codec_{row['op']}_{mode}_{row['impl']},{row['n']},{row['us']},"
+                f"{row['melem_s']:.0f} Melem/s\n"
+            )
+        for row in report["matmul"]:
+            fh.write(
+                f"dequant_matmul_{row['impl']}_{row['M']}x{row['K']}x{row['N']},"
+                f"{row['n']},{row['us']},{row['gflop_s']} GFLOP/s-cpu\n"
+            )
+    if write_json:
+        with open(bench_json_path(report["smoke"]), "w") as fh:
+            json.dump(report, fh, indent=2)
+            fh.write("\n")
 
 
-def main():
-    for name, n, us, derived in run():
-        print(f"kernel_{name}_{n},{us:.0f},{derived}")
+def main() -> None:
+    smoke = "--smoke" in sys.argv
+    write_json = "--json" in sys.argv
+    report = run(smoke=smoke)
+    emit(report, write_json)
+    for row in report["decode"] + report["encode"]:
+        mode = row.get("mode", "fused")
+        print(
+            f"kernel_{row['op']}_{mode}_{row['impl']}_{row['n']},"
+            f"{row['us']:.0f},{row['melem_s']:.0f} Melem/s"
+        )
+    for row in report["matmul"]:
+        print(
+            f"kernel_dequant_matmul_{row['impl']}_{row['M']}x{row['K']}x{row['N']},"
+            f"{row['us']:.0f},{row['gflop_s']} GFLOP/s-cpu"
+        )
+    sp = report["decode_speedup_lut_vs_bits"]
+    print(f"kernel_decode_speedup_lut_vs_bits,0,t8={sp['takum8']}x|t16={sp['takum16']}x")
+    if write_json:
+        print(f"kernel_bench_json,0,{os.path.relpath(bench_json_path(smoke), REPO_ROOT)}")
 
 
 if __name__ == "__main__":

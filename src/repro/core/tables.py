@@ -1,0 +1,143 @@
+"""Precomputed takum codec lookup tables (the tabulated shared decoder).
+
+The paper's companion hardware-codec work (Hunhold 2024) observes that the
+common <=12-bit takum decode stage is small enough to tabulate outright.  This
+module precomputes the tables the Pallas kernels gather from:
+
+* **Decode tables** — exact float32 values (and raw f32 bit patterns) for all
+  ``2**n`` takum-n patterns, with the *kernel* clamp semantics of
+  :func:`repro.core.takum.takum_decode_f32bits` (c > 127 saturates to
+  max-finite, c < -126 flushes to zero, NaR -> canonical NaN).  Sizes:
+  1 KiB for takum8, 256 KiB for takum16 — both VMEM-resident on TPU.
+
+* **Encode tables (takum8)** — an exact 256-entry table pair indexed by the
+  f32 *exponent byte* that turns encode into two gathers plus a handful of
+  integer ops.  Within one binade the takum8 code is an affine+RNE function
+  of the f32 mantissa, so each binade needs only:
+
+  - ``base``  : the code assigned to the bottom of the binade (2**c),
+  - either a mantissa *shift* (binades where the code keeps p >= 1 mantissa
+    bits: ``mag = base + RNE(m23 >> (23 - p))``), or a mantissa *threshold*
+    (binades whose codes carry no mantissa: ``mag = base + (m23 > thr)``).
+
+  Thresholds are the exact rounding boundaries: the value of the 9-bit takum
+  pattern ``2*m + 1`` (append-a-one midpoint property), computed in float64
+  via the :mod:`repro.core.takum_np` oracle, with ties resolved to the even
+  code.  This reproduces ``takum_encode``'s round-to-nearest-even on the bit
+  string bit-for-bit (verified exhaustively in ``tests/test_tables.py``).
+
+Subnormal f32 inputs flush to zero (DAZ): XLA CPU and TPU both treat f32
+subnormals as zero, so the tables bake that semantic in explicitly rather
+than inheriting it from backend flags.  See DESIGN.md §3.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+from . import takum_np
+
+__all__ = [
+    "decode_table_bits",
+    "decode_table_f32",
+    "encode8_tables",
+    "table_nbytes",
+    "ENC8_THR_FLAG",
+    "ENC8_THR_NEVER",
+]
+
+# meta-table layout: bits[15:8] = base code, bit 7 = threshold-path flag,
+# bits[6:0] = mantissa shift (23 - p) for shift-path binades.
+ENC8_THR_FLAG = 1 << 7
+# threshold sentinel: m23 can never exceed it, so the binade never rounds up
+ENC8_THR_NEVER = 1 << 23
+
+
+def table_nbytes(n: int) -> int:
+    """Bytes of VMEM one decode table occupies (f32 entries)."""
+    return (1 << n) * 4
+
+
+@functools.lru_cache(maxsize=None)
+def decode_table_bits(n: int) -> np.ndarray:
+    """uint32[2**n]: f32 bit patterns of every takum-n code (kernel semantics).
+
+    Built by running :func:`takum.takum_decode_f32bits` over ``arange(2**n)``
+    so the table is bit-identical to the branch-free decode by construction.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from .takum import takum_decode_f32bits
+
+    # first use may be inside a jit trace (kernels build their table operand
+    # during tracing): force eager evaluation so the table is a real constant
+    with jax.ensure_compile_time_eval():
+        pats = jnp.arange(1 << n, dtype=jnp.uint32)
+        out = np.asarray(takum_decode_f32bits(pats, n), dtype=np.uint32)
+    out.setflags(write=False)
+    return out
+
+
+@functools.lru_cache(maxsize=None)
+def decode_table_f32(n: int) -> np.ndarray:
+    """float32[2**n]: decoded value of every takum-n code (kernel semantics)."""
+    out = decode_table_bits(n).view(np.float32)
+    out.setflags(write=False)
+    return out
+
+
+def _code_of(x: float, boundaries: np.ndarray) -> int:
+    """Positive f64 value -> takum8 magnitude code under RNE-on-bit-string.
+
+    ``boundaries[m]`` is the exact rounding boundary between codes m and m+1
+    (the 9-bit takum value of pattern 2m+1); ties go to the even code.
+    """
+    m = 1
+    for j in range(1, 127):
+        if x > boundaries[j] or (x == boundaries[j] and j % 2 == 1):
+            m = j + 1
+    return m
+
+
+@functools.lru_cache(maxsize=None)
+def encode8_tables() -> tuple[np.ndarray, np.ndarray]:
+    """(meta uint32[256], thr int32[256]): exact f32 -> takum8 encode tables.
+
+    Indexed by the f32 exponent byte ``(bits >> 23) & 0xFF``.  Exponent 0
+    (zero and subnormals) maps to code 0 (DAZ); exponent 255 (inf/NaN) is
+    special-cased to NaR by the caller.
+    """
+    values = takum_np.decode(np.arange(128, dtype=np.uint64), 8)
+    bounds = takum_np.decode(2 * np.arange(127, dtype=np.uint64) + 1, 9)
+
+    meta = np.zeros(256, dtype=np.uint32)
+    thr = np.full(256, ENC8_THR_NEVER, dtype=np.int32)
+    # e = 0: zero and f32 subnormals encode to 0 (base 0, never rounds up)
+    meta[0] = ENC8_THR_FLAG | 1
+    for e in range(1, 255):
+        c = e - 127
+        scale = 2.0**c  # exact in f64
+        base = _code_of(scale, bounds)
+        g = (c + 1) if c >= 0 else -c
+        r = g.bit_length() - 1  # takum regime of characteristic c
+        p = 3 - r  # mantissa bits a takum8 code keeps at this c
+        if p >= 1:
+            # shift path: 2**c is exactly representable, code is base + RNE
+            assert values[base] == scale, (e, base)
+            meta[e] = np.uint32((base << 8) | (23 - p))
+        else:
+            meta[e] = np.uint32((base << 8) | ENC8_THR_FLAG | 1)
+            if base <= 126:
+                # exact boundary position on the 23-bit mantissa scale
+                mb = (bounds[base] / scale - 1.0) * (1 << 23)
+                if 0.0 <= mb < (1 << 23):
+                    imb = int(np.floor(mb))
+                    # tie (mb integral): round to the even code
+                    thr[e] = imb - 1 if (mb == imb and base % 2 == 1) else imb
+    # e = 255 entries are never used (NaR special-cased); leave as "never".
+    meta.setflags(write=False)
+    thr.setflags(write=False)
+    return meta, thr

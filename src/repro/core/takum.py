@@ -22,7 +22,8 @@ the ISA layer for format-agnostic compares).  Bit strings shorter than 12 bits
 behave as if zero-extended to 12 bits (C/M fields truncate).
 
 Encoders round to nearest with ties-to-even on the bit string and saturate
-(nonzero never becomes 0, finite never becomes NaR).  See DESIGN.md §6.
+(nonzero-normal never becomes 0, finite never becomes NaR); f32 subnormal
+inputs flush to zero (DAZ, matching XLA CPU/TPU).  See DESIGN.md §6.
 """
 
 from __future__ import annotations
@@ -133,7 +134,12 @@ def _encode_from_cm(c, mf, n: int, rnd_bits=None):
 def _encode_impl(x, n: int, mode: str, rnd_bits=None):
     x = x.astype(jnp.float32)
     a = jnp.abs(x)
-    is_zero = a == 0
+    # DAZ made explicit: f32 subnormal inputs flush to zero.  XLA CPU and TPU
+    # already treat f32 subnormals as zero in float compares/arithmetic; the
+    # explicit test makes the codec semantics backend-independent and keeps
+    # the LUT/bit-twiddle kernel encoders (which parse raw bits and would
+    # otherwise see the exact subnormal value) bit-identical to this oracle.
+    is_zero = a < jnp.float32(1.1754943508222875e-38)  # |x| < 2**-126
     is_nar = jnp.isnan(x) | jnp.isinf(x)
     neg = (jnp.signbit(x)) & (~is_zero) & (~is_nar)
 

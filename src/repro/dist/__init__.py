@@ -1,0 +1,14 @@
+"""Distribution layer (sharding, collectives, multi-device step).
+
+Currently a *minimal stub package*: the models layer only needs
+:func:`repro.dist.actx.constrain` (a sharding-annotation passthrough until a
+real mesh context lands).  The remaining modules (:mod:`collectives`,
+:mod:`sharding`, :mod:`step`, :mod:`pipeline`, :mod:`error_feedback`) expose
+their intended public names but raise ``NotImplementedError`` when called and
+advertise ``IS_STUB = True`` so tests and benchmarks can skip cleanly until
+the real dist layer lands (ROADMAP "Open items").
+"""
+
+from . import actx
+
+__all__ = ["actx"]

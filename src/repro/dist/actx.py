@@ -1,0 +1,22 @@
+"""Array-context helpers: sharding annotations for model code.
+
+The models annotate activations with logical axis names
+(``constrain(x, "B", None, "M", None)``).  Until the real mesh/axis-context
+machinery lands this is a passthrough — single-device semantics are exactly
+the unconstrained ones, and ``jax.lax.with_sharding_constraint`` is a no-op
+without a mesh anyway.
+"""
+
+from __future__ import annotations
+
+IS_STUB = True
+
+
+def constrain(x, *axes):
+    """Annotate ``x`` with logical sharding axes (one per dim; None = replicated).
+
+    Passthrough stub: returns ``x`` unchanged.  The real implementation maps
+    logical axis names through the active mesh rules and applies
+    ``with_sharding_constraint``.
+    """
+    return x

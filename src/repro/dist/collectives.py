@@ -1,0 +1,25 @@
+"""Compressed cross-pod collectives — STUB (real implementation pending).
+
+Intended surface: takum-compressed psum for gradient reduction across pods
+(the paper's uniform-format transport argument applied to the interconnect).
+Every entry point raises ``NotImplementedError`` until the dist layer lands.
+"""
+
+from __future__ import annotations
+
+IS_STUB = True
+
+_MSG = (
+    "repro.dist.collectives is a stub: the compressed-collectives layer has "
+    "not landed yet (see ROADMAP.md Open items). {name}() is not implemented."
+)
+
+
+def compressed_psum(x, axis_name, *, fmt="t8", **kw):
+    """Takum-compressed psum across ``axis_name`` (encode -> psum -> decode)."""
+    raise NotImplementedError(_MSG.format(name="compressed_psum"))
+
+
+def wire_bytes_per_element(fmt: str, pods: int) -> int:
+    """Bytes per element on the wire for a transport format on a pods-wide ring."""
+    raise NotImplementedError(_MSG.format(name="wire_bytes_per_element"))

@@ -1,0 +1,23 @@
+"""Error-feedback compressed reduction — STUB (real implementation pending).
+
+Every entry point raises ``NotImplementedError`` until the dist layer lands.
+"""
+
+from __future__ import annotations
+
+IS_STUB = True
+
+_MSG = (
+    "repro.dist.error_feedback is a stub: error-feedback compression has not "
+    "landed yet (see ROADMAP.md Open items). {name}() is not implemented."
+)
+
+
+def ef_init(params):
+    """Initialise the per-leaf error accumulator pytree."""
+    raise NotImplementedError(_MSG.format(name="ef_init"))
+
+
+def ef_compressed_psum(g, err, axis_name, *, fmt="t8", **kw):
+    """Compressed psum with error feedback; returns (reduced, new_err)."""
+    raise NotImplementedError(_MSG.format(name="ef_compressed_psum"))

@@ -1,0 +1,16 @@
+"""Pipeline-parallel apply — STUB (real implementation pending).
+
+Every entry point raises ``NotImplementedError`` until the dist layer lands.
+"""
+
+from __future__ import annotations
+
+IS_STUB = True
+
+
+def pipeline_apply(stages, x, **kw):
+    """Run ``x`` through pipeline stages with microbatching."""
+    raise NotImplementedError(
+        "repro.dist.pipeline is a stub: pipeline parallelism has not landed "
+        "yet (see ROADMAP.md Open items). pipeline_apply() is not implemented."
+    )

@@ -1,0 +1,25 @@
+"""Sharding rules for model/optimizer state — STUB (real implementation pending).
+
+Intended surface: logical-axis -> mesh-axis rule tables and helpers that
+produce ``NamedSharding``s for params, optimizer state and KV caches.  Every
+entry point raises ``NotImplementedError`` until the dist layer lands.
+"""
+
+from __future__ import annotations
+
+IS_STUB = True
+
+_MSG = (
+    "repro.dist.sharding is a stub: the sharding layer has not landed yet "
+    "(see ROADMAP.md Open items). {name}() is not implemented."
+)
+
+
+def rules_for(config, mesh):
+    """Sharding rule table for a model config on a mesh."""
+    raise NotImplementedError(_MSG.format(name="rules_for"))
+
+
+def shard_params(params, mesh, rules=None):
+    """Apply sharding rules to a parameter pytree."""
+    raise NotImplementedError(_MSG.format(name="shard_params"))

@@ -1,0 +1,25 @@
+"""Multi-device train/eval step — STUB (real implementation pending).
+
+Intended surface: jit-compiled sharded train step (data-parallel batch axis,
+tensor-parallel model axis, takum-compressed gradient reduction).  Every
+entry point raises ``NotImplementedError`` until the dist layer lands.
+"""
+
+from __future__ import annotations
+
+IS_STUB = True
+
+_MSG = (
+    "repro.dist.step is a stub: the distributed step has not landed yet "
+    "(see ROADMAP.md Open items). {name}() is not implemented."
+)
+
+
+def make_train_step(model, optimizer, mesh, **kw):
+    """Build the sharded train step function."""
+    raise NotImplementedError(_MSG.format(name="make_train_step"))
+
+
+def train_step(state, batch, **kw):
+    """One sharded optimization step."""
+    raise NotImplementedError(_MSG.format(name="train_step"))

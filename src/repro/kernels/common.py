@@ -23,6 +23,37 @@ def interpret_default() -> bool:
     return jax.default_backend() == "cpu"
 
 
+def round_up(x: int, m: int) -> int:
+    """Smallest multiple of m that is >= x."""
+    return -(-x // m) * m
+
+
+def choose_block(dim: int, want: int, align: int) -> int:
+    """Block size for a grid dim that may not divide ``dim``.
+
+    Returns ``want`` clamped to the aligned cover of ``dim``: small dims get
+    one (padded) tile, large dims keep the requested MXU-aligned block.  The
+    grid is then ``pl.cdiv(dim, block)`` with a masked edge tile — arbitrary
+    M/N/K and sequence lengths keep 8/128-multiple tiles instead of the old
+    degrade-to-divisor fallback (which collapsed prime dims to block size 1).
+    """
+    return min(want, round_up(dim, align))
+
+
+def dim_mask(tile_shape, axis: int, dim: int, block: int, pid):
+    """Edge-tile validity mask: True where global index along ``axis`` < dim.
+
+    ``pid`` is the grid coordinate of this tile along ``axis``'s grid dim.
+    Call only when ``dim % block != 0`` (trace-time decision); interior tiles
+    then pay a single cheap select.  Padding lanes read garbage (NaN in
+    interpret mode, undefined on TPU), so inputs feeding a contraction or a
+    softmax must be masked *before* use — packed takum bits are masked to 0,
+    which decodes to 0.0.
+    """
+    ids = jax.lax.broadcasted_iota(jnp.int32, tile_shape, axis)
+    return ids < (dim - pid * block)
+
+
 def decode_takum_f32(bits, n: int):
     """Kernel-safe linear-takum decode: uint bits -> float32 values.
 
@@ -76,19 +107,15 @@ def encode_takum_from_f32(x, n: int):
     bits = jax.lax.bitcast_convert_type(x, _U)
     neg_in = (bits >> 31) & 1
     absbits = bits & _U(0x7FFFFFFF)
-    is_zero = absbits == 0
+    # DAZ: f32 subnormals (raw exponent 0) encode to 0, matching XLA CPU/TPU
+    # float semantics and the jnp reference codec (DESIGN.md §3)
+    is_zero = absbits < _U(0x00800000)
     is_nar = absbits >= _U(0x7F800000)  # inf/nan
 
     raw_e = (absbits >> 23).astype(_I)
     raw_m = absbits & _U(0x7FFFFF)
-    # subnormal f32 inputs: normalise (msb of raw_m becomes the implicit one)
-    v = jnp.maximum(raw_m, 1)
-    v = v | (v >> 1); v = v | (v >> 2); v = v | (v >> 4)
-    v = v | (v >> 8); v = v | (v >> 16)
-    k = jax.lax.population_count(v).astype(_I) - 1
-    sub_m = (raw_m << jnp.minimum((23 - k).astype(_U), _U(31))) & _U(0x7FFFFF)
-    e = jnp.where(raw_e == 0, k - 149, raw_e - 127)
-    m23 = jnp.where(raw_e == 0, sub_m, raw_m)
+    e = raw_e - 127
+    m23 = raw_m
 
     # header from characteristic c == e (f32 range never saturates takum)
     cneg = e < 0

@@ -1,0 +1,96 @@
+"""Kernel-safe table-driven takum codec (gather-based decode/encode).
+
+The alternative to the ~40-integer-op branch-free decode in
+:mod:`repro.kernels.common`: a single VMEM gather per element from the
+precomputed tables in :mod:`repro.core.tables`.  Every kernel hot path
+(matmul, dual-matmul, decode-attention, 2D codec) selects between the two
+via a ``decode_impl={"bits", "lut"}`` knob; LUT is the default for takum8
+(1 KiB table) and bit-twiddle for takum16 (the 256 KiB table occupies a
+meaningful VMEM fraction and may not pay off — the A/B switch is the point).
+
+Tables enter kernels as ordinary pallas_call operands with a whole-array
+BlockSpec, shaped ``(2**n // 128, 128)`` so they tile cleanly into VMEM
+lanes; the kernel body flattens and gathers.  See DESIGN.md §3 for the
+bit-twiddle-vs-LUT trade-off discussion.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tables import ENC8_THR_FLAG, decode_table_f32, encode8_tables
+
+_U = jnp.uint32
+
+#: per-width default decode implementation (the A/B knob's resting position)
+DEFAULT_DECODE_IMPL = {8: "lut", 16: "bits"}
+#: supported values for the decode_impl/encode_impl knobs
+DECODE_IMPLS = ("bits", "lut")
+
+
+def resolve_impl(impl: str | None, n: int) -> str:
+    """None -> per-width default; otherwise validate the explicit choice."""
+    if impl is None:
+        return DEFAULT_DECODE_IMPL.get(n, "bits")
+    if impl not in DECODE_IMPLS:
+        raise ValueError(f"decode_impl must be one of {DECODE_IMPLS}, got {impl!r}")
+    return impl
+
+
+def decode_table_operand(n: int):
+    """The takum-n decode table as a 2D f32 operand, lanes-major."""
+    return jnp.asarray(decode_table_f32(n)).reshape(-1, 128)
+
+
+def encode8_table_operands():
+    """(meta, thr) takum8 encode tables as 2D operands (2, 128) each."""
+    meta, thr = encode8_tables()
+    return jnp.asarray(meta).reshape(-1, 128), jnp.asarray(thr).reshape(-1, 128)
+
+
+def decode_takum_lut(tab, bits):
+    """Gather-based takum decode: uint patterns -> float32 values.
+
+    ``tab`` is the (possibly 2D-shaped) f32 decode table for the same n as
+    ``bits``; the mapping is a pure per-element gather — zero, NaR and
+    negative patterns are all just table rows.
+    """
+    return jnp.take(tab.reshape(-1), bits.astype(jnp.int32), axis=0)
+
+
+def encode_takum8_lut(x, meta, thr):
+    """LUT-assisted exact f32 -> takum8 encode (two gathers + integer tail).
+
+    Bit-identical to ``takum.takum_encode(x, 8, mode="linear")``: RNE on the
+    bit string with ties to even, two's-complement negatives, NaR for
+    inf/NaN, and DAZ (f32 subnormals encode to 0).  ``meta``/``thr`` come
+    from :func:`encode8_table_operands`.
+    """
+    bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32), _U)
+    neg = bits >> 31
+    a = bits & _U(0x7FFFFFFF)
+    is_nar = a >= _U(0x7F800000)
+
+    e = (a >> 23).astype(jnp.int32)
+    m23 = (a & _U(0x7FFFFF)).astype(jnp.int32)
+    mt = jnp.take(meta.reshape(-1), e, axis=0)
+    t = jnp.take(thr.reshape(-1), e, axis=0)
+
+    base = mt >> 8
+    s = mt & _U(0x7F)
+    # threshold path: the binade holds at most one rounding boundary
+    mag_t = base + (m23 > t).astype(_U)
+    # shift path: base + RNE(m23 >> s), carry across binades is exact because
+    # takum codes are consecutive integers in value order
+    m23u = m23.astype(_U)
+    kept = m23u >> s
+    guard = (m23u >> (s - 1)) & 1
+    below = m23u & ((_U(1) << (s - 1)) - 1)
+    rnd = (guard == 1) & ((below != 0) | (((base + kept) & 1) == 1))
+    mag_s = base + kept + rnd.astype(_U)
+
+    mag = jnp.where((mt & _U(ENC8_THR_FLAG)) != 0, mag_t, mag_s)
+    enc = jnp.where(neg == 1, (_U(0) - mag) & _U(0xFF), mag)
+    enc = jnp.where(is_nar, _U(0x80), enc)
+    return enc

@@ -3,6 +3,11 @@
 ``use_kernels(False)`` routes every op through the pure-jnp reference —
 useful inside large jitted programs (dry-run lowering) where interpret-mode
 pallas calls would be slow, and as an A/B switch in benchmarks.
+
+``decode_impl``/``encode_impl`` select the in-kernel codec strategy
+("bits" = branch-free integer decode, "lut" = VMEM table gather; None picks
+the per-width default — LUT for takum8, bits for takum16).  The reference
+fallback ignores the knob (it defines the semantics both impls reproduce).
 """
 
 from __future__ import annotations
@@ -26,33 +31,39 @@ def kernels_enabled() -> bool:
     return _USE_KERNELS
 
 
-def encode(x, n: int):
+def encode(x, n: int, encode_impl=None):
     """float32 [..., R, C] -> packed takum-n."""
     if _USE_KERNELS and x.ndim == 2:
-        return takum_encode_2d(x, n)
+        return takum_encode_2d(x, n, encode_impl=encode_impl)
     return ref.codec_encode_ref(x, n)
 
 
-def decode(bits, n: int):
+def decode(bits, n: int, decode_impl=None):
     if _USE_KERNELS and bits.ndim == 2:
-        return takum_decode_2d(bits, n)
+        return takum_decode_2d(bits, n, decode_impl=decode_impl)
     return ref.codec_decode_ref(bits, n)
 
 
-def matmul(x, w_bits, n: int, out_dtype=jnp.float32, **blocks):
+def matmul(x, w_bits, n: int, out_dtype=jnp.float32, decode_impl=None, **blocks):
     """x @ decode(w_bits): the dequant-in-kernel GEMM (VDPPT analogue)."""
     if _USE_KERNELS:
-        return takum_matmul(x, w_bits, n, out_dtype=out_dtype, **blocks)
+        return takum_matmul(
+            x, w_bits, n, out_dtype=out_dtype, decode_impl=decode_impl, **blocks
+        )
     return ref.takum_matmul_ref(x, w_bits, n, out_dtype=out_dtype)
 
 
-def dual_matmul(x_bits, w_bits, n: int, out_dtype=jnp.float32, **blocks):
+def dual_matmul(x_bits, w_bits, n: int, out_dtype=jnp.float32, decode_impl=None, **blocks):
     if _USE_KERNELS:
-        return takum_dual_matmul(x_bits, w_bits, n, out_dtype=out_dtype, **blocks)
+        return takum_dual_matmul(
+            x_bits, w_bits, n, out_dtype=out_dtype, decode_impl=decode_impl, **blocks
+        )
     return ref.takum_dual_matmul_ref(x_bits, w_bits, n, out_dtype=out_dtype)
 
 
-def decode_attention(q, k_bits, v_bits, n: int, **kw):
+def decode_attention(q, k_bits, v_bits, n: int, decode_impl=None, **kw):
     if _USE_KERNELS:
-        return takum_decode_attention(q, k_bits, v_bits, n, **kw)
+        return takum_decode_attention(
+            q, k_bits, v_bits, n, decode_impl=decode_impl, **kw
+        )
     return ref.decode_attention_ref(q, k_bits, v_bits, n)

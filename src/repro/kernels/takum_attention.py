@@ -3,11 +3,16 @@
 The memory-wall case the paper closes with ("particular emphasis on 8- and
 16-bit types"): single-token decode attention is HBM-bandwidth-bound on the
 KV cache read, so storing KV as takum-8/16 cuts the dominant roofline term
-2-4x vs bfloat16/f32.  K/V tiles are decoded in VMEM right before the MXU.
+2-4x vs bfloat16/f32.  K/V tiles are decoded in VMEM right before the MXU,
+either via the branch-free bit decode or the VMEM decode table
+(``decode_impl``, LUT default for takum8).
 
 Layout: q [B, H, d] f32, kv cache [B, Hkv, S, d] packed takum-n (GQA: each kv
-head serves g = H/Hkv query heads).  Grid (B, Hkv, S/bs); online softmax with
-running (max, denom, acc) in VMEM scratch across the S blocks.
+head serves g = H/Hkv query heads).  Grid (B, Hkv, cdiv(S, bs)); online
+softmax with running (max, denom, acc) in VMEM scratch across the S blocks.
+Arbitrary sequence lengths are supported via a padded edge tile: padded
+logit columns are masked to -inf (-> zero softmax weight) and padded V rows
+are masked to bit pattern 0 (-> decode 0.0) so the weighted sum stays clean.
 """
 
 from __future__ import annotations
@@ -19,12 +24,20 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .common import decode_takum_f32, interpret_default
+from .common import choose_block, decode_takum_f32, dim_mask, interpret_default
+from .lut import decode_table_operand, decode_takum_lut, resolve_impl
 
 _LANE = 128
 
 
-def _decode_attn_kernel(n: int, scale: float, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref):
+def _decode_attn_kernel(n, impl, S, bs, scale, *refs):
+    if impl == "lut":
+        tab_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref = refs
+        decode = lambda bits: decode_takum_lut(tab_ref[...], bits)
+    else:
+        q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref = refs
+        decode = lambda bits: decode_takum_f32(bits, n)
+
     s = pl.program_id(2)
 
     @pl.when(s == 0)
@@ -34,12 +47,20 @@ def _decode_attn_kernel(n: int, scale: float, q_ref, k_ref, v_ref, o_ref, m_ref,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     q = q_ref[0, 0]  # [g, d] f32
-    k = decode_takum_f32(k_ref[0, 0], n)  # [bs, d]
-    v = decode_takum_f32(v_ref[0, 0], n)  # [bs, d]
+    vb = v_ref[0, 0]  # [bs, d] packed bits
+    if S % bs:
+        # padded V rows -> bits 0 -> decode 0.0 (their weight is 0 below, but
+        # 0 * garbage-NaN would still poison the accumulator)
+        vb = jnp.where(dim_mask(vb.shape, 0, S, bs, s), vb, 0)
+    k = decode(k_ref[0, 0])  # [bs, d]
+    v = decode(vb)  # [bs, d]
 
     logits = jax.lax.dot_general(
         q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
     ) * scale  # [g, bs]
+    if S % bs:
+        # padded K rows produced garbage logit columns: mask to -inf
+        logits = jnp.where(dim_mask(logits.shape, 1, S, bs, s), logits, -jnp.inf)
 
     m_prev = m_ref[:, :1]  # [g, 1]
     m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1, keepdims=True))
@@ -58,37 +79,42 @@ def _decode_attn_kernel(n: int, scale: float, q_ref, k_ref, v_ref, o_ref, m_ref,
         o_ref[0, 0] = (acc_ref[...] / l_ref[:, :1]).astype(o_ref.dtype)
 
 
-def _tile(dim, want):
-    t = min(dim, want)
-    while dim % t:
-        t -= 1
-    return t
-
-
-@functools.partial(jax.jit, static_argnames=("n", "block_s", "interpret"))
-def takum_decode_attention(q, k_bits, v_bits, n: int, *, block_s=512, interpret=None):
+@functools.partial(
+    jax.jit, static_argnames=("n", "block_s", "interpret", "decode_impl")
+)
+def takum_decode_attention(
+    q, k_bits, v_bits, n: int, *, block_s=512, interpret=None, decode_impl=None
+):
     """One-token decode attention; returns [B, H, d] f32.
 
-    q: [B, H, d] f32; k_bits/v_bits: [B, Hkv, S, d] packed takum-n.
+    q: [B, H, d] f32; k_bits/v_bits: [B, Hkv, S, d] packed takum-n.  S may be
+    any length (padded edge tile); d and g = H/Hkv are whole blocks.
     """
     interpret = interpret_default() if interpret is None else interpret
+    impl = resolve_impl(decode_impl, n)
     B, H, d = q.shape
     _, Hkv, S, _ = k_bits.shape
     assert H % Hkv == 0
     g = H // Hkv
-    bs = _tile(S, block_s)
+    bs = choose_block(S, block_s, 8)
     scale = float(d) ** -0.5
 
     qg = q.reshape(B, Hkv, g, d)
-    grid = (B, Hkv, S // bs)
+    grid = (B, Hkv, pl.cdiv(S, bs))
+    in_specs = [
+        pl.BlockSpec((1, 1, g, d), lambda b, h, s: (b, h, 0, 0)),
+        pl.BlockSpec((1, 1, bs, d), lambda b, h, s: (b, h, s, 0)),
+        pl.BlockSpec((1, 1, bs, d), lambda b, h, s: (b, h, s, 0)),
+    ]
+    args = [qg, k_bits, v_bits]
+    if impl == "lut":
+        tab = decode_table_operand(n)
+        in_specs.insert(0, pl.BlockSpec(tab.shape, lambda b, h, s: (0, 0)))
+        args.insert(0, tab)
     out = pl.pallas_call(
-        functools.partial(_decode_attn_kernel, n, scale),
+        functools.partial(_decode_attn_kernel, n, impl, S, bs, scale),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, g, d), lambda b, h, s: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, bs, d), lambda b, h, s: (b, h, s, 0)),
-            pl.BlockSpec((1, 1, bs, d), lambda b, h, s: (b, h, s, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, g, d), lambda b, h, s: (b, h, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((B, Hkv, g, d), jnp.float32),
         scratch_shapes=[
@@ -97,5 +123,5 @@ def takum_decode_attention(q, k_bits, v_bits, n: int, *, block_s=512, interpret=
             pltpu.VMEM((g, d), jnp.float32),
         ],
         interpret=interpret,
-    )(qg, k_bits, v_bits)
+    )(*args)
     return out.reshape(B, H, d)

@@ -1,8 +1,15 @@
 """Pallas TPU kernel: vectorised takum encode/decode (the VCVT instructions).
 
 Element-wise codec over 2D tiles.  BlockSpec keeps one (block_rows, block_cols)
-tile of input + output in VMEM; the body is branch-free integer bit
-manipulation (shared ≤12-bit header decoder, paper §I) feeding the VPU.
+tile of input + output in VMEM; the body is either the branch-free integer bit
+manipulation (shared <=12-bit header decoder, paper §I) or the table-driven
+path (one VMEM gather per element for decode, two 256-entry gathers for the
+takum8 encode) feeding the VPU — selectable per call via
+``decode_impl``/``encode_impl``, LUT default for takum8.
+
+Arbitrary (R, C) shapes are supported: the grid is cdiv-padded and edge tiles
+need no masking — the codec is element-wise, so garbage padding lanes only
+produce garbage outputs that the clipped store drops.
 """
 
 from __future__ import annotations
@@ -14,54 +21,97 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.takum import storage_dtype
-from .common import decode_takum_f32, encode_takum_from_f32, interpret_default
+from .common import choose_block, decode_takum_f32, encode_takum_from_f32, interpret_default
+from .lut import (
+    decode_table_operand,
+    decode_takum_lut,
+    encode8_table_operands,
+    encode_takum8_lut,
+    resolve_impl,
+)
 
 
-def _decode_kernel(n: int, b_ref, o_ref):
-    o_ref[...] = decode_takum_f32(b_ref[...], n)
+def _decode_kernel(n, impl, *refs):
+    if impl == "lut":
+        tab_ref, b_ref, o_ref = refs
+        o_ref[...] = decode_takum_lut(tab_ref[...], b_ref[...])
+    else:
+        b_ref, o_ref = refs
+        o_ref[...] = decode_takum_f32(b_ref[...], n)
 
 
-def _encode_kernel(n: int, x_ref, o_ref):
-    enc = encode_takum_from_f32(x_ref[...], n)
+def _encode_kernel(n, impl, *refs):
+    if impl == "lut":
+        meta_ref, thr_ref, x_ref, o_ref = refs
+        enc = encode_takum8_lut(x_ref[...], meta_ref[...], thr_ref[...])
+    else:
+        x_ref, o_ref = refs
+        enc = encode_takum_from_f32(x_ref[...], n)
     o_ref[...] = enc.astype(o_ref.dtype)
 
 
-def _tile(dim, want):
-    t = min(dim, want)
-    while dim % t:
-        t -= 1
-    return t
+def _blocks(R, C, block_rows, block_cols):
+    br = choose_block(R, block_rows, 8)
+    bc = choose_block(C, block_cols, 128)
+    return br, bc, (pl.cdiv(R, br), pl.cdiv(C, bc))
 
 
-@functools.partial(jax.jit, static_argnames=("n", "block_rows", "block_cols", "interpret"))
-def takum_decode_2d(bits, n: int, *, block_rows=256, block_cols=512, interpret=None):
+@functools.partial(
+    jax.jit,
+    static_argnames=("n", "block_rows", "block_cols", "interpret", "decode_impl"),
+)
+def takum_decode_2d(
+    bits, n: int, *, block_rows=256, block_cols=512, interpret=None, decode_impl=None
+):
     """[R, C] packed takum-n -> [R, C] float32."""
     interpret = interpret_default() if interpret is None else interpret
+    impl = resolve_impl(decode_impl, n)
     R, C = bits.shape
-    br, bc = _tile(R, block_rows), _tile(C, block_cols)
-    grid = (R // br, C // bc)
+    br, bc, grid = _blocks(R, C, block_rows, block_cols)
+    in_specs = [pl.BlockSpec((br, bc), lambda i, j: (i, j))]
+    args = [bits]
+    if impl == "lut":
+        tab = decode_table_operand(n)
+        in_specs.insert(0, pl.BlockSpec(tab.shape, lambda i, j: (0, 0)))
+        args.insert(0, tab)
     return pl.pallas_call(
-        functools.partial(_decode_kernel, n),
+        functools.partial(_decode_kernel, n, impl),
         grid=grid,
-        in_specs=[pl.BlockSpec((br, bc), lambda i, j: (i, j))],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((R, C), jnp.float32),
         interpret=interpret,
-    )(bits)
+    )(*args)
 
 
-@functools.partial(jax.jit, static_argnames=("n", "block_rows", "block_cols", "interpret"))
-def takum_encode_2d(x, n: int, *, block_rows=256, block_cols=512, interpret=None):
+@functools.partial(
+    jax.jit,
+    static_argnames=("n", "block_rows", "block_cols", "interpret", "encode_impl"),
+)
+def takum_encode_2d(
+    x, n: int, *, block_rows=256, block_cols=512, interpret=None, encode_impl=None
+):
     """[R, C] float32 -> [R, C] packed takum-n (uint8/uint16)."""
     interpret = interpret_default() if interpret is None else interpret
+    impl = resolve_impl(encode_impl, n)
+    if impl == "lut" and n != 8:
+        raise ValueError("encode_impl='lut' is only tabulated for n=8")
     R, C = x.shape
-    br, bc = _tile(R, block_rows), _tile(C, block_cols)
-    grid = (R // br, C // bc)
+    br, bc, grid = _blocks(R, C, block_rows, block_cols)
+    in_specs = [pl.BlockSpec((br, bc), lambda i, j: (i, j))]
+    args = [x]
+    if impl == "lut":
+        meta, thr = encode8_table_operands()
+        in_specs = [
+            pl.BlockSpec(meta.shape, lambda i, j: (0, 0)),
+            pl.BlockSpec(thr.shape, lambda i, j: (0, 0)),
+        ] + in_specs
+        args = [meta, thr] + args
     return pl.pallas_call(
-        functools.partial(_encode_kernel, n),
+        functools.partial(_encode_kernel, n, impl),
         grid=grid,
-        in_specs=[pl.BlockSpec((br, bc), lambda i, j: (i, j))],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((R, C), storage_dtype(n)),
         interpret=interpret,
-    )(x)
+    )(*args)

@@ -6,9 +6,18 @@ adaptation of the paper's widening dot-product instructions (F08 ->
 VDPPT8PT16 etc.): takum is the storage/transport format, the MXU replaces
 the SIMD lane, accumulation is f32.
 
-Grid: (M/bm, N/bn, K/bk), K innermost; one f32 [bm, bn] accumulator tile
-lives in VMEM scratch across the K steps.  MXU-aligned tile defaults
-(multiples of 128 on the contracted/output dims).
+Grid: (cdiv(M,bm), cdiv(N,bn), cdiv(K,bk)), K innermost; one f32 [bm, bn]
+accumulator tile lives in VMEM scratch across the K steps.  Arbitrary
+(M, K, N) are supported via padded edge tiles: blocks stay MXU-aligned
+(8/128 multiples by default) and the K-dim padding lanes are masked to zero
+on *both* operands before the dot (padding reads are garbage — NaN in
+interpret mode — and NaN * 0 would poison the accumulator).  M/N padding
+needs no masks: out-of-range output rows/cols are dropped by the clipped
+store.
+
+The in-VMEM dequant step is selectable via ``decode_impl``: ``"bits"`` is
+the branch-free integer decode, ``"lut"`` gathers from the precomputed
+VMEM-resident table (default for takum8; see repro.kernels.lut).
 """
 
 from __future__ import annotations
@@ -20,31 +29,39 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .common import decode_takum_f32, interpret_default
+from .common import choose_block, decode_takum_f32, dim_mask, interpret_default
+from .lut import decode_table_operand, decode_takum_lut, resolve_impl
 
 
-def _mm_kernel(n: int, x_ref, w_ref, o_ref, acc_ref):
+def _mm_kernel(n, impl, dual, K, bk, *refs):
+    if impl == "lut":
+        tab_ref, x_ref, w_ref, o_ref, acc_ref = refs
+        decode = lambda bits: decode_takum_lut(tab_ref[...], bits)
+    else:
+        x_ref, w_ref, o_ref, acc_ref = refs
+        decode = lambda bits: decode_takum_f32(bits, n)
+
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    w = decode_takum_f32(w_ref[...], n)  # VMEM dequant: uint -> f32
-    acc_ref[...] += jnp.dot(
-        x_ref[...].astype(jnp.float32), w, preferred_element_type=jnp.float32
-    )
+    kid = pl.program_id(2)
+    wb = w_ref[...]
+    if K % bk:
+        wb = jnp.where(dim_mask(wb.shape, 0, K, bk, kid), wb, 0)
+    w = decode(wb)  # VMEM dequant: uint -> f32
 
-    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
-    def _flush():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+    if dual:
+        xb = x_ref[...]
+        if K % bk:
+            xb = jnp.where(dim_mask(xb.shape, 1, K, bk, kid), xb, 0)
+        x = decode(xb)
+    else:
+        x = x_ref[...]
+        if K % bk:
+            x = jnp.where(dim_mask(x.shape, 1, K, bk, kid), x, 0)
+        x = x.astype(jnp.float32)
 
-
-def _dual_kernel(n: int, x_ref, w_ref, o_ref, acc_ref):
-    @pl.when(pl.program_id(2) == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    x = decode_takum_f32(x_ref[...], n)
-    w = decode_takum_f32(w_ref[...], n)
     acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
 
     @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
@@ -52,40 +69,46 @@ def _dual_kernel(n: int, x_ref, w_ref, o_ref, acc_ref):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
-def _tile(dim, want):
-    t = min(dim, want)
-    while dim % t:
-        t -= 1
-    return t
-
-
-def _call(kernel, n, x, w, out_dtype, bm, bn, bk, interpret):
+def _call(n, impl, dual, x, w, out_dtype, bm, bn, bk, interpret):
     M, K = x.shape
     K2, N = w.shape
     assert K == K2, (x.shape, w.shape)
-    bm, bn, bk = _tile(M, bm), _tile(N, bn), _tile(K, bk)
-    grid = (M // bm, N // bn, K // bk)
+    bm = choose_block(M, bm, 8)
+    bn = choose_block(N, bn, 128)
+    bk = choose_block(K, bk, 128)
+    grid = (pl.cdiv(M, bm), pl.cdiv(N, bn), pl.cdiv(K, bk))
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+        pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+    ]
+    args = [x, w]
+    if impl == "lut":
+        tab = decode_table_operand(n)
+        in_specs.insert(0, pl.BlockSpec(tab.shape, lambda i, j, k: (0, 0)))
+        args.insert(0, tab)
     return pl.pallas_call(
-        functools.partial(kernel, n),
+        functools.partial(_mm_kernel, n, impl, dual, K, bk),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
-    )(x, w)
+    )(*args)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("n", "out_dtype", "bm", "bn", "bk", "interpret")
+    jax.jit,
+    static_argnames=("n", "out_dtype", "bm", "bn", "bk", "interpret", "decode_impl"),
 )
-def takum_matmul(x, w_bits, n: int, *, out_dtype=jnp.float32, bm=256, bn=256, bk=512, interpret=None):
+def takum_matmul(
+    x, w_bits, n: int, *, out_dtype=jnp.float32, bm=256, bn=256, bk=512,
+    interpret=None, decode_impl=None,
+):
     """x [M,K] f32/bf16 @ decode(w_bits [K,N] takum-n) -> [M,N] out_dtype."""
     interpret = interpret_default() if interpret is None else interpret
-    return _call(_mm_kernel, n, x, w_bits, out_dtype, bm, bn, bk, interpret)
+    impl = resolve_impl(decode_impl, n)
+    return _call(n, impl, False, x, w_bits, out_dtype, bm, bn, bk, interpret)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
@@ -113,9 +136,14 @@ takum_matmul_ad.defvjp(_takum_matmul_fwd, _takum_matmul_bwd)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("n", "out_dtype", "bm", "bn", "bk", "interpret")
+    jax.jit,
+    static_argnames=("n", "out_dtype", "bm", "bn", "bk", "interpret", "decode_impl"),
 )
-def takum_dual_matmul(x_bits, w_bits, n: int, *, out_dtype=jnp.float32, bm=256, bn=256, bk=512, interpret=None):
+def takum_dual_matmul(
+    x_bits, w_bits, n: int, *, out_dtype=jnp.float32, bm=256, bn=256, bk=512,
+    interpret=None, decode_impl=None,
+):
     """decode(x_bits) @ decode(w_bits), both packed takum-n (VDPPT analogue)."""
     interpret = interpret_default() if interpret is None else interpret
-    return _call(_dual_kernel, n, x_bits, w_bits, out_dtype, bm, bn, bk, interpret)
+    impl = resolve_impl(decode_impl, n)
+    return _call(n, impl, True, x_bits, w_bits, out_dtype, bm, bn, bk, interpret)

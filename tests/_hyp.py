@@ -1,0 +1,102 @@
+"""Hypothesis, or a deterministic fallback when it is not installed.
+
+The property tests use a small surface (``given``, ``settings``,
+``st.integers``, ``st.floats``).  Real hypothesis is preferred (shrinking,
+example database); in environments without it this module substitutes a
+deterministic sampler so the tier-1 suite still collects and runs: each
+``@given`` test is executed over ``max_examples`` examples drawn from a fixed
+seed, always including the strategy's boundary values.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # deterministic fallback
+    import functools
+    import inspect
+    import math
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+    _DEFAULT_EXAMPLES = 100
+
+    class _Integers:
+        def __init__(self, min_value, max_value):
+            self.lo, self.hi = min_value, max_value
+
+        def sample(self, rng, k):
+            edge = [v for v in (self.lo, self.hi, 0, 1, -1) if self.lo <= v <= self.hi]
+            body = rng.integers(self.lo, self.hi, size=max(k - len(edge), 0), endpoint=True)
+            return [int(v) for v in edge] + [int(v) for v in body]
+
+    class _Floats:
+        def __init__(self, min_value=None, max_value=None, allow_nan=None,
+                     allow_infinity=None, allow_subnormal=True, width=64):
+            self.lo = -math.inf if min_value is None else min_value
+            self.hi = math.inf if max_value is None else max_value
+            unbounded = min_value is None and max_value is None
+            # hypothesis semantics: setting any bound disables NaN/inf defaults
+            self.allow_nan = unbounded if allow_nan is None else allow_nan
+            self.allow_infinity = unbounded if allow_infinity is None else allow_infinity
+            self.allow_subnormal = allow_subnormal
+            self.width = width
+
+        def sample(self, rng, k):
+            out = [v for v in (0.0, -0.0, 1.0, -1.0, 0.5, -2.0) if self.lo <= v <= self.hi]
+            if self.allow_infinity:
+                out += [v for v in (math.inf, -math.inf) if self.lo <= v <= self.hi]
+            if self.allow_nan:
+                out.append(math.nan)
+            if self.allow_subnormal:
+                out += [v for v in (5e-324, -5e-324, 1e-310) if self.lo <= v <= self.hi]
+            while len(out) < k:
+                # log-uniform magnitudes cover the full dynamic range
+                mag = 10.0 ** rng.uniform(-300, 300)
+                v = math.copysign(mag, rng.uniform(-1, 1))
+                if self.width == 32:
+                    v = float(np.float32(v))
+                if self.lo <= v <= self.hi:
+                    out.append(v)
+            return out[:k]
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def floats(**kw):
+            return _Floats(**kw)
+
+    st = _Strategies()
+
+    def settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*strategies, **kw_strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                k = getattr(fn, "_max_examples", _DEFAULT_EXAMPLES)
+                rng = np.random.default_rng(0)
+                cols = [s.sample(rng, k) for s in strategies]
+                kcols = {name: s.sample(rng, k) for name, s in kw_strategies.items()}
+                for i in range(k):
+                    row = [c[i] for c in cols]
+                    krow = {name: c[i] for name, c in kcols.items()}
+                    fn(*args, *row, **kwargs, **krow)
+
+            # hide the sampled parameters from pytest's fixture resolution
+            del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature()
+            return wrapper
+
+        return deco

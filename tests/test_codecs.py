@@ -13,7 +13,7 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis, or deterministic fallback
 
 from repro.core import ofp8, posit_np, takum, takum_np
 from repro.core.formats import FORMATS

@@ -3,7 +3,7 @@
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis, or deterministic fallback
 
 from repro.core import takum_np
 from repro.core.avx10 import GROUPS, PAPER_COUNTS, by_category, count_report, expand

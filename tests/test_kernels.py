@@ -115,6 +115,74 @@ def test_attention_reduces_to_value_mean_for_uniform_logits():
     np.testing.assert_allclose(out, vdec.mean(axis=2), rtol=1e-5, atol=1e-5)
 
 
+# ------------------------------------------------- padded grids + impl A/B
+
+PADDED_MM_SHAPES = [
+    # (M, K, N, bm, bn, bk): every dim a non-multiple of its block
+    (100, 60, 36, 64, 64, 64),
+    (107, 193, 65, 64, 128, 128),
+    (129, 130, 131, 128, 128, 128),
+]
+
+
+@pytest.mark.parametrize("n", NS)
+@pytest.mark.parametrize("impl", ("bits", "lut"))
+@pytest.mark.parametrize("dims", PADDED_MM_SHAPES)
+def test_takum_matmul_padded_grid_vs_ref(n, impl, dims):
+    M, K, N, bm, bn, bk = dims
+    x = jnp.asarray(_rand((M, K), 1.0))
+    wb = takum_encode(jnp.asarray(_rand((K, N), 0.2, seed=1)), n)
+    got = np.asarray(takum_matmul(x, wb, n, bm=bm, bn=bn, bk=bk, decode_impl=impl))
+    want = np.asarray(ref.takum_matmul_ref(x, wb, n))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-5)
+    xb = takum_encode(x, n)
+    got2 = np.asarray(takum_dual_matmul(xb, wb, n, bm=bm, bn=bn, bk=bk, decode_impl=impl))
+    want2 = np.asarray(ref.takum_dual_matmul_ref(xb, wb, n))
+    np.testing.assert_allclose(got2, want2, rtol=2e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("impl", ("bits", "lut"))
+def test_takum_matmul_single_ktile_bit_exact(impl):
+    """With one K tile the kernel performs the same dot as the reference on
+    identical decoded values: results must agree bit-for-bit, padding included."""
+    M, K, N = 100, 60, 36
+    x = jnp.asarray(_rand((M, K), 1.0))
+    wb = takum_encode(jnp.asarray(_rand((K, N), 0.2, seed=1)), 8)
+    got = np.asarray(takum_matmul(x, wb, 8, bm=128, bn=128, bk=128, decode_impl=impl))
+    want = np.asarray(ref.takum_matmul_ref(x, wb, 8))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("n", NS)
+@pytest.mark.parametrize("impl", ("bits", "lut"))
+@pytest.mark.parametrize("dims", [(1, 4, 2, 100, 64, 64), (2, 8, 8, 257, 128, 128)])
+def test_takum_decode_attention_padded_grid_vs_ref(n, impl, dims):
+    B, H, Hkv, S, d, bs = dims
+    q = jnp.asarray(_rand((B, H, d), 1.0, seed=3))
+    k = takum_encode(jnp.asarray(_rand((B, Hkv, S, d), 1.0, seed=4)), n)
+    v = takum_encode(jnp.asarray(_rand((B, Hkv, S, d), 1.0, seed=5)), n)
+    got = np.asarray(takum_decode_attention(q, k, v, n, block_s=bs, decode_impl=impl))
+    want = np.asarray(ref.decode_attention_ref(q, k, v, n))
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("n", NS)
+@pytest.mark.parametrize("impl", ("bits", "lut"))
+def test_codec_kernel_impls_bit_exact_padded(n, impl):
+    """Codec kernels: both impls bit-for-bit vs ref on a non-divisible shape."""
+    x = _rand((257, 129))
+    enc_r = np.asarray(ref.codec_encode_ref(jnp.asarray(x), n))
+    if not (impl == "lut" and n != 8):  # encode LUT is takum8-only
+        enc_k = np.asarray(takum_encode_2d(jnp.asarray(x), n, encode_impl=impl))
+        np.testing.assert_array_equal(enc_k, enc_r)
+    dec_k = takum_decode_2d(jnp.asarray(enc_r), n, decode_impl=impl)
+    dec_r = ref.codec_decode_ref(jnp.asarray(enc_r), n)
+    np.testing.assert_array_equal(
+        np.asarray(jax.lax.bitcast_convert_type(dec_k, jnp.uint32)),
+        np.asarray(jax.lax.bitcast_convert_type(dec_r, jnp.uint32)),
+    )
+
+
 def test_matmul_custom_vjp_grads_x_only():
     """Packed weights are integer buffers: gradients flow to x only (policy:
     quantised weights are updated via master params, not through the kernel)."""

@@ -1,0 +1,150 @@
+"""Table-driven codec: exhaustive equivalence against the bit-twiddle paths.
+
+The LUT subsystem (repro.core.tables + repro.kernels.lut) must be *exactly*
+the same function as the branch-free decoders/encoders it replaces:
+
+  decode_takum_lut == decode_takum_f32 == takum_decode_f32bits   (bit-for-bit)
+  encode_takum8_lut == takum_encode(n=8) == encode_takum_from_f32
+
+Decode is checked over all 2**8 and all 2**16 patterns; encode over every
+f32 exponent byte x a dense mantissa sample *plus* every exact rounding
+boundary (the ties are where RNE-on-the-bit-string lives or dies).
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import takum_np
+from repro.core.tables import decode_table_bits, decode_table_f32, encode8_tables
+from repro.core.takum import takum_decode_f32bits, takum_encode
+from repro.kernels.common import decode_takum_f32, encode_takum_from_f32
+from repro.kernels.lut import (
+    decode_table_operand,
+    decode_takum_lut,
+    encode8_table_operands,
+    encode_takum8_lut,
+)
+
+
+def _f32_bits(x):
+    return np.asarray(jax.lax.bitcast_convert_type(x, jnp.uint32))
+
+
+# ----------------------------------------------------------------- decode
+
+
+@pytest.mark.parametrize("n", (8, 16))
+def test_decode_lut_equivalence_exhaustive(n):
+    """All 2**n patterns: LUT gather == kernel bit decode == core decode."""
+    pats = jnp.arange(1 << n, dtype=jnp.uint32)
+    want_bits = np.asarray(takum_decode_f32bits(pats, n))
+    kern_bits = _f32_bits(decode_takum_f32(pats, n))
+    tab = decode_table_operand(n)
+    lut_bits = _f32_bits(decode_takum_lut(tab, pats))
+    np.testing.assert_array_equal(kern_bits, want_bits)
+    np.testing.assert_array_equal(lut_bits, want_bits)
+    # and the cached numpy tables agree with themselves
+    np.testing.assert_array_equal(decode_table_bits(n), want_bits)
+    assert decode_table_f32(n).dtype == np.float32
+
+
+@pytest.mark.parametrize("n", (8, 16))
+def test_decode_table_semantics(n):
+    """Spot semantics: zero, NaR, saturation, FTZ all baked into the table."""
+    tab = decode_table_f32(n)
+    assert tab[0] == 0.0
+    assert np.isnan(tab[1 << (n - 1)])  # NaR
+    assert tab[(1 << (n - 1)) - 1] == np.float32(3.4028235e38)  # maxpos saturates
+    assert tab[1] == 0.0  # minpos below f32 range flushes (FTZ)
+    # negation = two's complement: value-level mirror for finite entries
+    m = np.arange(1, 1 << (n - 1))
+    neg = ((1 << n) - m) & ((1 << n) - 1)
+    np.testing.assert_array_equal(tab[neg], -tab[m])
+
+
+# ----------------------------------------------------------------- encode
+
+
+def _boundary_probe_bits():
+    """f32 bit patterns at/next to every takum8 rounding boundary + sweeps."""
+    meta, thr = encode8_tables()
+    out = [np.arange(1 << 16, dtype=np.uint32) << 16]  # coarse full-range sweep
+    probes = []
+    for e in range(1, 255):
+        t = int(thr[e])
+        for d in (-2, -1, 0, 1, 2):
+            if 0 <= t + d < (1 << 23):
+                probes.append((e << 23) | (t + d))
+        if not (int(meta[e]) & (1 << 7)):  # shift-path binade: tie points
+            s = int(meta[e]) & 0x7F
+            for kk in range(8):
+                for d in (-1, 0, 1):
+                    m = (kk << s) + (1 << (s - 1)) + d
+                    if 0 <= m < (1 << 23):
+                        probes.append((e << 23) | m)
+    for d in range(-3, 4):
+        probes.append(16384 + d)  # the single subnormal-range boundary (2**-135)
+    out.append(np.array(probes, dtype=np.uint32))
+    rng = np.random.default_rng(0)
+    out.append(rng.integers(0, 1 << 31, size=200_000, dtype=np.uint32))
+    bits = np.concatenate(out)
+    return np.concatenate([bits, bits | 0x80000000])  # both signs
+
+
+def test_encode8_lut_matches_bit_twiddle_and_oracle():
+    bits = _boundary_probe_bits()
+    x = jnp.asarray(bits.view(np.float32))
+    meta, thr = encode8_table_operands()
+    got = np.asarray(encode_takum8_lut(x, meta, thr))
+    want_core = np.asarray(takum_encode(x, 8))
+    want_kern = np.asarray(encode_takum_from_f32(x, 8))
+    np.testing.assert_array_equal(got, want_core)
+    np.testing.assert_array_equal(want_kern.astype(np.uint8), want_core)
+
+
+def test_encode8_lut_specials():
+    x = jnp.asarray(np.array(
+        [0.0, -0.0, np.inf, -np.inf, np.nan, 1.0, -1.0, 3.4028235e38], np.float32
+    ))
+    meta, thr = encode8_table_operands()
+    got = np.asarray(encode_takum8_lut(x, meta, thr))
+    np.testing.assert_array_equal(got[:5], [0, 0, 0x80, 0x80, 0x80])
+    assert got[5] == 0x40 and got[6] == 0xC0  # +-1 in takum
+    assert got[7] == 0x78  # f32 maxpos -> c=127 code, not the saturated tail
+
+
+def test_encode8_lut_roundtrip_projection():
+    """encode(decode(m)) == m wherever decode is injective (no flush/sat)."""
+    tab = decode_table_f32(8)
+    meta, thr = encode8_table_operands()
+    proj = np.asarray(encode_takum8_lut(jnp.asarray(tab), meta, thr))
+    maxfin = np.float32(3.4028235e38)
+    for m in range(256):
+        v = tab[m]
+        if np.isnan(v) or v == 0.0 or abs(v) >= maxfin:
+            continue  # NaR, flushed-to-zero tail, or saturated tail
+        assert proj[m] == m, (m, v, proj[m])
+
+
+def test_encode_daz_subnormals_flush_everywhere():
+    """f32 subnormal inputs encode to 0 in all three encoders (explicit DAZ)."""
+    subs = np.array([2.0**-149, 2.0**-127, -(2.0**-130), 9.1835e-41], np.float32)
+    assert all(v != 0 for v in subs.view(np.uint32))  # really subnormal patterns
+    x = jnp.asarray(subs)
+    meta, thr = encode8_table_operands()
+    np.testing.assert_array_equal(np.asarray(takum_encode(x, 8)), 0)
+    np.testing.assert_array_equal(np.asarray(encode_takum_from_f32(x, 8)), 0)
+    np.testing.assert_array_equal(np.asarray(encode_takum8_lut(x, meta, thr)), 0)
+    np.testing.assert_array_equal(np.asarray(takum_encode(x, 16)), 0)
+    np.testing.assert_array_equal(np.asarray(encode_takum_from_f32(x, 16)), 0)
+
+
+def test_encode8_boundaries_are_9bit_takums():
+    """The threshold construction agrees with the f64 oracle's midpoints."""
+    bounds = takum_np.decode(2 * np.arange(127, dtype=np.uint64) + 1, 9)
+    values = takum_np.decode(np.arange(128, dtype=np.uint64), 8)
+    # each boundary lies strictly between its neighbouring code values
+    for m in range(1, 126):
+        assert values[m] < bounds[m] < values[m + 1]
