@@ -3,7 +3,9 @@
 Runs the takum-compressed ring all-reduce on a fake 8-device mesh in a
 subprocess (device count must be set before jax init) and reports error vs
 the exact f32 all-reduce, plus the analytic wire-traffic model used by the
-roofline's collective term.
+roofline's collective term.  ``--smoke`` shrinks the payload for CI; the
+summary lands in ``benchmarks/results/collectives.json`` and is folded into
+the perf-trajectory artifact by ``benchmarks/run.py --json``.
 """
 
 from __future__ import annotations
@@ -27,7 +29,7 @@ from repro.dist.collectives import compressed_psum
 
 mesh = jax.make_mesh((4, 2), ("pod", "x"))
 rng = np.random.default_rng(0)
-x = jnp.asarray(rng.standard_normal((4, 256, 64)).astype(np.float32))
+x = jnp.asarray(rng.standard_normal(%SHAPE%).astype(np.float32))
 
 out = {}
 for fmt in ("f32", "t16", "t8"):
@@ -39,24 +41,30 @@ for fmt in ("f32", "t16", "t8"):
     exact = np.broadcast_to(np.asarray(x).sum(0, keepdims=True), x.shape)
     rms = np.sqrt(np.mean(np.asarray(x) ** 2))  # reduction error vs term scale
     err = np.abs(got - exact) / rms
-    out[fmt] = {"max_err_over_rms": float(err.max()), "mean_err_over_rms": float(err.mean())}
+    out[fmt] = {
+        "max_err_over_rms": float(err.max()),
+        "mean_err_over_rms": float(err.mean()),
+        "rms_err_over_rms": float(np.sqrt(np.mean(err ** 2))),
+    }
 print(json.dumps(out))
 """
 
 
-def run():
-    # the child subprocess cannot surface the stub's NotImplementedError
-    # cleanly, so detect it up front (benchmarks.run reports SKIP)
+def run(smoke: bool = False):
     from repro.dist import collectives
 
-    if getattr(collectives, "IS_STUB", False):
+    if getattr(collectives, "IS_STUB", False):  # pragma: no cover
         raise NotImplementedError(
             "repro.dist.collectives is a stub; compressed-psum bench pending"
         )
     os.makedirs(RESULTS, exist_ok=True)
+    shape = "(4, 64, 32)" if smoke else "(4, 256, 64)"
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "../src")
-    res = subprocess.run([sys.executable, "-c", _CHILD], env=env, capture_output=True, text=True, timeout=420)
+    res = subprocess.run(
+        [sys.executable, "-c", _CHILD.replace("%SHAPE%", shape)],
+        env=env, capture_output=True, text=True, timeout=420,
+    )
     assert res.returncode == 0, res.stderr[-2000:]
     quality = json.loads(res.stdout.strip().splitlines()[-1])
 
@@ -66,17 +74,34 @@ def run():
         fmt: {f"pods={p}": wire_bytes_per_element(fmt, p) for p in (2, 4, 8)}
         for fmt in ("f32", "t16", "t8")
     }
+    # headline ratio: wire bytes saved vs the f32 status quo (pod-count free)
+    reduction = {
+        fmt: wire_bytes_per_element("f32", 2) / wire_bytes_per_element(fmt, 2)
+        for fmt in ("t16", "t8")
+    }
+    summary = {
+        "quality_4pod": quality,
+        "wire_bytes_per_element": wire,
+        "wire_reduction_vs_f32": reduction,
+        "smoke": smoke,
+    }
     with open(os.path.join(RESULTS, "collectives.json"), "w") as fh:
-        json.dump({"quality_4pod": quality, "wire_bytes_per_element": wire}, fh, indent=1)
-    return quality, wire
+        json.dump(summary, fh, indent=1)
+    return summary
 
 
 def main():
+    smoke = "--smoke" in sys.argv
     t0 = time.perf_counter()
-    quality, wire = run()
+    summary = run(smoke)
     us = (time.perf_counter() - t0) * 1e6
-    print(f"collectives_compressed_psum,{us:.0f},{quality}")
-    print(f"collectives_wire_bytes,0,{wire}")
+    q = summary["quality_4pod"]
+    print(f"collectives_compressed_psum,{us:.0f},{q}")
+    red = summary["wire_reduction_vs_f32"]
+    print(
+        f"collectives_wire_bytes,0,f32->t16 {red['t16']:.0f}x | "
+        f"f32->t8 {red['t8']:.0f}x | per-element {summary['wire_bytes_per_element']}"
+    )
 
 
 if __name__ == "__main__":

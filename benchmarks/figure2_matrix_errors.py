@@ -18,7 +18,9 @@ Validation targets (qualitative, from the paper's text):
 
 from __future__ import annotations
 
+import json
 import os
+import sys
 import time
 
 import numpy as np
@@ -27,13 +29,14 @@ from repro.core.formats import FORMATS
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results")
 N_MATRICES = 1401
+N_MATRICES_SMOKE = 150  # same regime mix; CI-sized corpus
 SEED = 2025
 
 
-def _corpus(rng):
+def _corpus(rng, n_matrices: int = N_MATRICES):
     """Yield (name, matrix) — sizes chosen so nnz <= 50k (paper's filter)."""
     kinds = ["cfd", "chem", "graph", "fem", "control", "illcond"]
-    for i in range(N_MATRICES):
+    for i in range(n_matrices):
         kind = kinds[i % len(kinds)]
         scale = 10.0 ** rng.uniform(-7, 7)
         n = int(rng.integers(24, 200))
@@ -86,10 +89,10 @@ FMT_GROUPS = {
 }
 
 
-def run() -> dict:
+def run(smoke: bool = False) -> dict:
     os.makedirs(RESULTS, exist_ok=True)
     rng = np.random.default_rng(SEED)
-    mats = list(_corpus(rng))
+    mats = list(_corpus(rng, N_MATRICES_SMOKE if smoke else N_MATRICES))
     errs = {name: [] for grp in FMT_GROUPS.values() for name in grp}
     for kind, a in mats:
         for grp in FMT_GROUPS.values():
@@ -142,11 +145,16 @@ def check_paper_claims(summary) -> list[str]:
 
 
 def main():
+    smoke = "--smoke" in sys.argv
     t0 = time.perf_counter()
-    summary = run()
+    summary = run(smoke=smoke)
     claims = check_paper_claims(summary)
     us = (time.perf_counter() - t0) * 1e6
     n_pass = sum(c.startswith("PASS") for c in claims)
+    with open(os.path.join(RESULTS, "figure2.json"), "w") as fh:
+        json.dump({"smoke": smoke, "claims": claims,
+                   "claims_pass": [n_pass, len(claims)],
+                   "summary": summary}, fh, indent=1)
     print(f"figure2_matrix_errors,{us:.0f},claims_pass={n_pass}/{len(claims)}")
     for c in claims:
         print("   ", c)

@@ -34,6 +34,7 @@ from repro.kernels.lut import (
     encode8_table_operands,
     encode_takum8_lut,
 )
+from repro.kernels.takum_attention import takum_decode_attention
 from repro.kernels.takum_matmul import takum_matmul
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -173,10 +174,81 @@ def bench_matmul(smoke: bool) -> list[dict]:
     return out
 
 
+def bench_attention(smoke: bool) -> list[dict]:
+    """Decode-attention tokens/s over a packed takum KV cache (both impls).
+
+    One call = one generated token per batch element against an S-long
+    cache, so tokens/s = B / wall; the HBM-side story is the packed cache
+    read (S * d * Hkv * n/8 bytes per head block).
+    """
+    B, H, Hkv, S, d = (1, 4, 2, 256, 64) if smoke else (2, 8, 2, 1024, 64)
+    bs = 128 if smoke else 256
+    reps = 2 if smoke else 5
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.standard_normal((B, H, d)).astype(np.float32))
+    out = []
+    for n in (8, 16):
+        kv_dtype = {8: np.uint8, 16: np.uint16}[n]
+        k = jnp.asarray(rng.integers(0, 1 << n, (B, Hkv, S, d)).astype(kv_dtype))
+        v = jnp.asarray(rng.integers(0, 1 << n, (B, Hkv, S, d)).astype(kv_dtype))
+        # NaR patterns poison the softmax-weighted sum; zero them like a real
+        # cache (encode never emits NaR for finite inputs)
+        nar = np.uint64(1 << (n - 1))
+        k = jnp.where(k == nar, 0, k)
+        v = jnp.where(v == nar, 0, v)
+        for impl in ("bits", "lut"):
+            f = lambda q, k, v, n=n, impl=impl: takum_decode_attention(
+                q, k, v, n, block_s=bs, decode_impl=impl
+            )
+            us = _time(f, q, k, v, reps=reps)
+            out.append({
+                "op": "decode_attention", "n": n, "impl": impl,
+                "B": B, "H": H, "Hkv": Hkv, "S": S, "d": d,
+                "us": round(us, 1), "tokens_s": round(B / us * 1e6, 1),
+            })
+    return out
+
+
+def bench_train_step(smoke: bool) -> list[dict]:
+    """End-to-end single-device train step (dist.step on a 1x1 mesh): the
+    full fwd+bwd+AdamW pipeline the dist layer shards, timed as the e2e
+    baseline row of the perf trajectory."""
+    from repro import configs
+    from repro.data import SyntheticLM
+    from repro.dist import step as dstep
+    from repro.optim import adamw_init
+    from repro.models import transformer as T
+    from repro.quant.policy import POLICIES
+
+    B, Sq = (4, 64) if smoke else (8, 128)
+    reps = 2 if smoke else 5
+    out = []
+    for policy in ("bf16", "takum"):
+        cfg = configs.get_smoke("llama3_8b").with_(quant=POLICIES[policy])
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        pipe = SyntheticLM(cfg.vocab_size, Sq, B, seed=11)
+        batch = pipe.batch(0)
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        state = dstep.TrainState(
+            params=params, opt=adamw_init(params, fmt=cfg.quant.opt_state),
+            rng=jax.random.PRNGKey(1),
+        )
+        step = jax.jit(dstep.make_train_step(cfg, mesh))
+        us = _time(step, state, batch, reps=reps)
+        out.append({
+            "op": "train_step", "arch": "llama3_8b(smoke)", "policy": policy,
+            "B": B, "S": Sq, "us": round(us, 1),
+            "tokens_s": round(B * Sq / us * 1e6, 1),
+        })
+    return out
+
+
 def run(smoke: bool = False) -> dict:
     decode = bench_decode(smoke)
     encode = bench_encode(smoke)
     matmul = bench_matmul(smoke)
+    attention = bench_attention(smoke)
+    train_step = bench_train_step(smoke)
 
     def _melem(rows, n, impl, mode):
         return next(
@@ -193,13 +265,15 @@ def run(smoke: bool = False) -> dict:
         }
 
     report = {
-        "schema": "bench_kernels/v1",
+        "schema": "bench_kernels/v2",
         "backend": jax.default_backend(),
         "interpret_mode": jax.default_backend() == "cpu",
         "smoke": smoke,
         "decode": decode,
         "encode": encode,
         "matmul": matmul,
+        "attention": attention,
+        "train_step": train_step,
         # headline A/B: interpret-style (per-op) harness — tracks instruction
         # count, the TPU-relevant quantity; "fused" = XLA-CPU-fused floor
         "decode_speedup_lut_vs_bits": _speedups("op_dispatch"),
@@ -224,6 +298,16 @@ def emit(report: dict, write_json: bool) -> None:
                 f"dequant_matmul_{row['impl']}_{row['M']}x{row['K']}x{row['N']},"
                 f"{row['n']},{row['us']},{row['gflop_s']} GFLOP/s-cpu\n"
             )
+        for row in report["attention"]:
+            fh.write(
+                f"decode_attention_{row['impl']}_S{row['S']},{row['n']},"
+                f"{row['us']},{row['tokens_s']} tok/s-cpu\n"
+            )
+        for row in report["train_step"]:
+            fh.write(
+                f"train_step_{row['policy']},0,{row['us']},"
+                f"{row['tokens_s']} tok/s-cpu\n"
+            )
     if write_json:
         with open(bench_json_path(report["smoke"]), "w") as fh:
             json.dump(report, fh, indent=2)
@@ -245,6 +329,16 @@ def main() -> None:
         print(
             f"kernel_dequant_matmul_{row['impl']}_{row['M']}x{row['K']}x{row['N']},"
             f"{row['us']:.0f},{row['gflop_s']} GFLOP/s-cpu"
+        )
+    for row in report["attention"]:
+        print(
+            f"kernel_decode_attention_{row['impl']}_{row['n']}_S{row['S']},"
+            f"{row['us']:.0f},{row['tokens_s']} tok/s-cpu"
+        )
+    for row in report["train_step"]:
+        print(
+            f"train_step_e2e_{row['policy']},{row['us']:.0f},"
+            f"{row['tokens_s']} tok/s-cpu"
         )
     sp = report["decode_speedup_lut_vs_bits"]
     print(f"kernel_decode_speedup_lut_vs_bits,0,t8={sp['takum8']}x|t16={sp['takum16']}x")

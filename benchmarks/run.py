@@ -3,34 +3,76 @@ benches.  Prints ``name,us_per_call,derived`` CSV lines.
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--smoke] [--json]
 
-``--smoke`` runs only the kernel microbench at reduced sizes (the CI-sized
-run) and validates the JSON artifact; ``--json`` makes the kernel bench emit
-``BENCH_kernels.json`` at the repo root (the persistent perf-trajectory
-record; smoke runs divert to ``BENCH_kernels.smoke.json`` so they never
-clobber the committed full-size baseline).  Benches whose subsystem is
-still a stub (NotImplementedError) are reported as SKIP, not failures.
+``--smoke`` runs every bench at its CI size (reduced kernel shapes, the
+150-matrix figure2 corpus, the small-payload collectives subprocess, the
+analytic-only roofline) and validates the JSON artifact; ``--json`` makes
+the kernel bench emit ``BENCH_kernels.json`` at the repo root (the
+persistent perf-trajectory record; smoke runs divert to
+``BENCH_kernels.smoke.json`` so they never clobber the committed full-size
+baseline) and then *folds* the other benches' summaries
+(``benchmarks/results/{figure2,isa_tables,collectives,roofline}.json``)
+into it, so one artifact carries the whole trajectory.  Benches whose
+subsystem is still a stub (NotImplementedError) are reported as SKIP, not
+failures.
 """
 
 from __future__ import annotations
 
 import json
+import os
 import sys
 import traceback
 
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
 
-def _validate_bench_json(smoke: bool) -> None:
+# artifact key -> (bench module name, results file it writes)
+FOLD_SOURCES = {
+    "figure2": ("figure2", "figure2.json"),
+    "isa": ("tables_isa", "isa_tables.json"),
+    "collectives": ("collectives", "collectives.json"),
+    "roofline": ("roofline", "roofline.json"),
+}
+
+
+def _fold_results(smoke: bool, fold_keys: set) -> None:
+    """Attach summaries of the benches that ran *this invocation* to the
+    artifact — never stale results/ files from earlier runs (a leftover
+    smoke-sized figure2.json must not masquerade as full-baseline data)."""
+    from benchmarks.kernel_bench import bench_json_path
+
+    path = bench_json_path(smoke)
+    with open(path) as fh:
+        report = json.load(fh)
+    for key in fold_keys:
+        src = os.path.join(RESULTS, FOLD_SOURCES[key][1])
+        if os.path.exists(src):
+            with open(src) as fh:
+                report[key] = json.load(fh)
+    with open(path, "w") as fh:
+        json.dump(report, fh, indent=2)
+        fh.write("\n")
+
+
+def _validate_bench_json(smoke: bool, fold_keys: set) -> None:
     from benchmarks.kernel_bench import bench_json_path
 
     with open(bench_json_path(smoke)) as fh:
         report = json.load(fh)
-    required = {"schema", "decode", "matmul", "decode_speedup_lut_vs_bits",
-                "hbm_model_bytes_1024x1024"}
+    required = {"schema", "decode", "matmul", "attention", "train_step",
+                "decode_speedup_lut_vs_bits", "hbm_model_bytes_1024x1024",
+                } | fold_keys
     missing = required - report.keys()
     assert not missing, f"BENCH_kernels.json missing keys: {sorted(missing)}"
     impls = {(r["n"], r["impl"]) for r in report["decode"]}
     assert {(8, "bits"), (8, "lut"), (16, "bits"), (16, "lut")} <= impls, impls
     assert any(not r["aligned"] for r in report["matmul"]), "need non-aligned matmul shapes"
-    print(f"bench_json_valid,0,{len(report['decode'])}+{len(report['matmul'])} rows")
+    if "collectives" in fold_keys:
+        red = report["collectives"]["wire_reduction_vs_f32"]
+        assert red["t8"] == 4.0 and red["t16"] == 2.0, red
+    assert any(r["op"] == "decode_attention" for r in report["attention"])
+    assert any(r["op"] == "train_step" for r in report["train_step"])
+    print(f"bench_json_valid,0,{len(report['decode'])}+{len(report['matmul'])} rows "
+          f"+ folds {sorted(fold_keys)}")
 
 
 def main() -> None:
@@ -48,7 +90,13 @@ def main() -> None:
     )
 
     if smoke:
-        modules = [("kernels", kernel_bench)]
+        modules = [
+            ("tables_isa", tables_isa),
+            ("figure2", figure2_matrix_errors),
+            ("kernels", kernel_bench),
+            ("collectives", collectives_bench),
+            ("roofline", roofline),
+        ]
     else:
         modules = [
             ("figure1", figure1_dynamic_range),
@@ -61,6 +109,7 @@ def main() -> None:
             modules.insert(1, ("figure2", figure2_matrix_errors))
 
     failures = 0
+    ran = set()
     for name, mod in modules:
         argv = ["bench"] + (["--smoke"] if smoke else []) + (["--json"] if emit_json else [])
         try:
@@ -69,6 +118,7 @@ def main() -> None:
                 mod.main()
             finally:
                 sys.argv = old_argv
+            ran.add(name)
         except NotImplementedError as e:
             # subsystem is a declared stub (e.g. repro.dist collectives)
             print(f"{name},0,SKIP ({e})")
@@ -78,8 +128,12 @@ def main() -> None:
             traceback.print_exc()
 
     if emit_json:
+        # fold/require only what ran this invocation (e.g. --quick skips
+        # figure2; a stub SKIP drops its key rather than failing validation)
+        fold_keys = {k for k, (mod_name, _) in FOLD_SOURCES.items() if mod_name in ran}
         try:
-            _validate_bench_json(smoke)
+            _fold_results(smoke, fold_keys)
+            _validate_bench_json(smoke, fold_keys)
         except Exception:
             failures += 1
             print("bench_json,0,ERROR")

@@ -8,6 +8,7 @@ format-special-case instructions, and the format-suffix collapse
 
 from __future__ import annotations
 
+import json
 import os
 import time
 
@@ -54,12 +55,15 @@ def run() -> dict:
     text = "\n".join(lines)
     with open(os.path.join(RESULTS, "isa_tables.txt"), "w") as fh:
         fh.write(text + "\n")
-    return {
+    out = {
         "paper_total": sum(PAPER_COUNTS.values()),
         "reconstructed_total": cr["total"]["reconstructed"],
         "groups": (rep["groups_before"], rep["groups_after"]),
         "removed_specials": len(REMOVED_SPECIALS),
     }
+    with open(os.path.join(RESULTS, "isa_tables.json"), "w") as fh:
+        json.dump(out, fh, indent=1)
+    return out
 
 
 def main():

@@ -1,14 +1,29 @@
-"""Distribution layer (sharding, collectives, multi-device step).
+"""Distribution layer: sharding, compressed collectives, multi-device step,
+pipeline parallelism and error feedback.
 
-Currently a *minimal stub package*: the models layer only needs
-:func:`repro.dist.actx.constrain` (a sharding-annotation passthrough until a
-real mesh context lands).  The remaining modules (:mod:`collectives`,
-:mod:`sharding`, :mod:`step`, :mod:`pipeline`, :mod:`error_feedback`) expose
-their intended public names but raise ``NotImplementedError`` when called and
-advertise ``IS_STUB = True`` so tests and benchmarks can skip cleanly until
-the real dist layer lands (ROADMAP "Open items").
+Modules (import explicitly; only the lightweight ones load eagerly):
+
+* :mod:`~repro.dist.actx` — logical-axis activation constraints (used by the
+  models; passthrough outside a ``use_mesh`` scope).
+* :mod:`~repro.dist.sharding` — (name, rank)-keyed PartitionSpec rules for
+  params / optimizer state / batches / KV caches.
+* :mod:`~repro.dist.collectives` — takum-compressed ring all-reduce
+  (``compressed_psum``) + the analytic wire-traffic model.
+* :mod:`~repro.dist.step` — sharded train/prefill/serve step builders.
+* :mod:`~repro.dist.pipeline` — GPipe-style microbatched stage execution.
+* :mod:`~repro.dist.error_feedback` — residual-carrying compressed psum.
+
+Importing the package installs the jax 0.4.x compatibility adapters
+(``jax.shard_map`` / ``jax.lax.pvary``) via :mod:`~repro.dist._compat`; on a
+modern jax that is a no-op.  ``step`` and ``sharding`` are *not* imported
+here to keep the models -> actx -> dist import chain acyclic (step imports
+the models).
 """
 
-from . import actx
+from . import _compat
+
+_compat.install()
+
+from . import actx  # noqa: E402  (needs the compat install above)
 
 __all__ = ["actx"]

@@ -1,0 +1,70 @@
+"""jax version compatibility for the dist layer (shard_map / pvary).
+
+The dist tests and user code are written against the modern jax surface
+(``jax.shard_map``, ``jax.lax.pvary``).  On the pinned 0.4.x toolchain those
+live in ``jax.experimental.shard_map`` / don't exist, so this module provides
+a thin adapter and — when the attributes are missing — installs them on the
+jax namespace at ``repro.dist`` import time:
+
+* ``shard_map(f, mesh=..., in_specs=..., out_specs=..., ...)``: forwards to
+  ``jax.experimental.shard_map.shard_map`` with ``check_rep=False``.  Modern
+  jax tracks per-axis value variance (declared via ``pvary``) instead of
+  0.4.x's conservative replication checker, which rejects valid programs
+  built from ``ppermute`` rings; disabling the legacy check reproduces the
+  modern semantics for the collectives used here.
+* ``pvary(x, axis_names)``: identity.  0.4.x has no variance tracking, so
+  "mark x as varying over these axes" is a no-op.
+
+Both installs are gated on ``hasattr`` — on a modern jax the namespace is
+untouched and :data:`shard_map` is a thin wrapper that only translates the
+``check_rep`` keyword to its modern spelling (``check_vma``).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "pvary", "install"]
+
+
+if hasattr(jax, "shard_map"):
+    import inspect
+
+    _native_shard_map = jax.shard_map
+    # modern jax renamed check_rep -> check_vma; translate so internal
+    # callers can pass check_rep on either toolchain
+    _check_kw = next(
+        (k for k in ("check_vma", "check_rep")
+         if k in inspect.signature(_native_shard_map).parameters),
+        None,
+    )
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_rep=False, **kw):
+        if _check_kw is not None and _check_kw not in kw:
+            kw[_check_kw] = check_rep
+        return _native_shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw
+        )
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map_04x
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_rep=False, **kw):
+        return _shard_map_04x(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=check_rep, **kw
+        )
+
+
+if hasattr(jax.lax, "pvary"):
+    pvary = jax.lax.pvary
+else:
+    def pvary(x, axis_names):  # noqa: ARG001 - matches the modern signature
+        return x
+
+
+def install() -> None:
+    """Install the adapters on the jax namespace when missing (idempotent)."""
+    if not hasattr(jax, "shard_map"):
+        jax.shard_map = shard_map
+    if not hasattr(jax.lax, "pvary"):
+        jax.lax.pvary = pvary

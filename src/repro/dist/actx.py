@@ -1,22 +1,84 @@
 """Array-context helpers: sharding annotations for model code.
 
-The models annotate activations with logical axis names
-(``constrain(x, "B", None, "M", None)``).  Until the real mesh/axis-context
-machinery lands this is a passthrough — single-device semantics are exactly
-the unconstrained ones, and ``jax.lax.with_sharding_constraint`` is a no-op
-without a mesh anyway.
+The models annotate activations with *logical* axis names
+(``constrain(x, "B", None, "M", None)``).  ``use_mesh`` activates a mesh (and
+an optional logical->mesh-axis rule table) for the current trace;
+``constrain`` then lowers each logical name through the rules and applies
+``jax.lax.with_sharding_constraint``.  Outside any ``use_mesh`` scope the
+call is a passthrough — single-device semantics are exactly the
+unconstrained ones, which keeps every non-dist test and example unchanged.
+
+Default logical rules:
+
+    "B" (batch)  -> every data-parallel mesh axis present, in ("pod", "data")
+                    order (pod folds into data for the batch dimension)
+    "M" (model)  -> the "model" (tensor-parallel) axis
+
+Mesh axes of size 1 are dropped from the constraint so trivial meshes add no
+sharding ops to the HLO.
 """
 
 from __future__ import annotations
 
-IS_STUB = True
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+IS_STUB = False
+
+# (mesh, rules) for the innermost active `use_mesh` scope; None = passthrough.
+_ACTIVE: Optional[tuple] = None
+
+
+def default_rules(mesh) -> dict:
+    """Logical-axis -> mesh-axes mapping for a mesh (see module docstring)."""
+    from .sharding import data_axes  # lazy: sibling imports during pkg init
+
+    return {
+        "B": data_axes(mesh),
+        "M": ("model",) if "model" in mesh.axis_names else (),
+    }
+
+
+@contextlib.contextmanager
+def use_mesh(mesh, rules: Optional[dict] = None):
+    """Activate ``mesh`` for :func:`constrain` within the scope.
+
+    ``mesh=None`` deactivates (forces passthrough) — used by the manual-pod
+    shard_map path in :mod:`repro.dist.step`, where sharding constraints on
+    auto axes inside a partially-manual region are not supported.
+    """
+    global _ACTIVE
+    prev = _ACTIVE
+    _ACTIVE = None if mesh is None else (mesh, rules or default_rules(mesh))
+    try:
+        yield
+    finally:
+        _ACTIVE = prev
 
 
 def constrain(x, *axes):
     """Annotate ``x`` with logical sharding axes (one per dim; None = replicated).
 
-    Passthrough stub: returns ``x`` unchanged.  The real implementation maps
-    logical axis names through the active mesh rules and applies
-    ``with_sharding_constraint``.
+    No-op unless a mesh is active (``use_mesh``) and at least one logical
+    axis maps to a mesh axis of size > 1.
     """
-    return x
+    if _ACTIVE is None:
+        return x
+    mesh, rules = _ACTIVE
+    if getattr(x, "ndim", None) != len(axes):
+        return x
+    dims = []
+    nontrivial = False
+    for a in axes:
+        mapped = tuple(
+            ax for ax in (rules.get(a, ()) if a is not None else ())
+            if ax in mesh.axis_names and mesh.shape[ax] > 1
+        )
+        dims.append(mapped if mapped else None)
+        nontrivial = nontrivial or bool(mapped)
+    if not nontrivial:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*dims)))

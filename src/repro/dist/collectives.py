@@ -1,25 +1,159 @@
-"""Compressed cross-pod collectives — STUB (real implementation pending).
+"""Takum-compressed cross-pod collectives.
 
-Intended surface: takum-compressed psum for gradient reduction across pods
-(the paper's uniform-format transport argument applied to the interconnect).
-Every entry point raises ``NotImplementedError`` until the dist layer lands.
+The paper's uniform-format transport argument applied to the scarcest
+bandwidth in a multi-pod deployment: the inter-pod interconnect.  Gradients
+(and any other reduction payload) cross the wire as takum8/takum16 bit
+patterns instead of f32, cutting wire bytes 4x/2x, while every arithmetic
+accumulation stays in f32 (accumulate-wide / transport-narrow — the same
+split the VDPPT dequant kernels make for HBM).
+
+Algorithm (``compressed_psum``): a P-hop ring.  Each device encodes its
+local contribution once (RNE takum encode, DAZ semantics fixed in PR 1) and
+the *bit patterns* circulate via ``lax.ppermute`` — re-encoding is never
+needed because decode(encode(x)) is a fixed point of the codec.  Decode on
+arrival is a single gather from the exact f32 decode LUT
+(:mod:`repro.core.tables`), i.e. the PR-1 LUT codec applied at the wire.
+After P-1 hops every device holds every source's payload; terms are
+reordered into *source order* before the f32 summation so all devices reduce
+in the same order and the result is bit-identical across the ring (at the
+cost of one P-deep stack of the payload, fine for single-digit pod counts).
+
+Error model: with ``exact_local=True`` (default) the device's own term is
+kept in f32, so exactly P-1 terms carry one quantisation error each — the
+bound the dist tests assert.  ``exact_local=False`` quantises the local term
+too (every device then sums identical values; used by the train step and by
+error feedback, whose residual bookkeeping needs the transmitted value).
+
+``wire_bytes_per_element`` is the matching analytic traffic model: a P-ring
+all-reduce moves P-1 messages of the full payload per device.
 """
 
 from __future__ import annotations
 
-IS_STUB = True
+import jax
+import jax.numpy as jnp
 
-_MSG = (
-    "repro.dist.collectives is a stub: the compressed-collectives layer has "
-    "not landed yet (see ROADMAP.md Open items). {name}() is not implemented."
-)
+from repro.core.tables import decode_table_f32
+from repro.core.takum import takum_encode
+from repro.quant.policy import FORMAT_BITS, is_takum, takum_width
+
+IS_STUB = False
+
+# cache the *numpy* tables only: a jnp constant materialised inside a traced
+# region (e.g. a scan body) is a tracer and must never outlive its trace
+_TABLES: dict = {}
 
 
-def compressed_psum(x, axis_name, *, fmt="t8", **kw):
-    """Takum-compressed psum across ``axis_name`` (encode -> psum -> decode)."""
-    raise NotImplementedError(_MSG.format(name="compressed_psum"))
+def _decode_table(n: int):
+    if n not in _TABLES:
+        _TABLES[n] = decode_table_f32(n)
+    return jnp.asarray(_TABLES[n])
+
+
+def _lut_decode(bits, n: int):
+    return jnp.take(_decode_table(n), bits.astype(jnp.int32), axis=0)
+
+
+def axis_size(axis_name) -> int:
+    """Static size of a shard_map axis (psum of 1 constant-folds to an int)."""
+    return jax.lax.psum(1, axis_name)
+
+
+def _ring_reduce(wire, own_f32, axis_name, decode, N: int,
+                 canonical_order: bool = True):
+    """P-1 ``ppermute`` hops of narrow wire payloads; f32 sum of the decodes.
+
+    ``wire`` is this device's encoded contribution (takum bits or bf16),
+    ``decode`` maps a payload to f32, and ``own_f32`` is the term the device
+    charges itself (exact f32 or its own decode, see module docstring).
+    With ``canonical_order`` the terms are gathered into *source* order
+    before the reduction, so every ring member sums in the same order and
+    the result is bit-identical across devices.  That gather needs
+    ``lax.axis_index``, which only lowers inside *fully* manual shard_map
+    regions (in partially-auto regions it becomes an XLA PartitionId, which
+    SPMD cannot partition) — callers in partial-auto contexts pass False and
+    accept ulp-level cross-pod divergence from the per-device hop order.
+    """
+    perm = [(i, (i + 1) % N) for i in range(N)]
+    terms = [own_f32]  # hop 0 = own payload = source p
+    msg = wire
+    for _ in range(N - 1):
+        msg = jax.lax.ppermute(msg, axis_name, perm)
+        terms.append(decode(msg))  # hop i carries source (p - i) % N
+    stacked = jnp.stack(terms)
+    if canonical_order:
+        p = jax.lax.axis_index(axis_name)
+        stacked = jnp.take(stacked, (p - jnp.arange(N)) % N, axis=0)
+    return jnp.sum(stacked, axis=0)
+
+
+def compressed_psum(x, axis_name, fmt: str = "t8", *, exact_local: bool = True,
+                    canonical_order: bool = True, sr_key=None):
+    """All-reduce-sum across ``axis_name`` with takum-compressed wire payloads.
+
+    Must be called inside ``shard_map`` (the axis must be a manual mesh
+    axis).  ``fmt`` in {"f32", "bf16", "t8", "t16"}; "f32" falls through to
+    the native ``lax.psum`` (exact), "bf16" rides the same narrow-wire /
+    f32-accumulate ring as the takum formats (a plain bf16 psum would also
+    *sum* in bf16, charging the wire format for narrow-accumulation error
+    it didn't cause).  Wider takum wire formats are rejected: the LUT
+    decode tabulates 2**n entries, practical only for n <= 16.  ``sr_key``
+    switches the wire encode from RNE to stochastic rounding
+    (``QuantPolicy.stochastic_rounding`` for grad_comm); fold the ring
+    member's index into the key so SR noise decorrelates across sources —
+    but replicas of one source (e.g. data-axis copies in a fully-manual
+    region) must share a key, or their rings diverge bitwise.  Returns f32
+    of ``x``'s shape.  See :func:`_ring_reduce` for ``canonical_order``.
+    """
+    xf = x.astype(jnp.float32)
+    if fmt == "f32":
+        return jax.lax.psum(xf, axis_name)
+    N = axis_size(axis_name)
+    if N == 1:
+        return xf
+    if fmt == "bf16":
+        # narrow wire, wide accumulation — same contract as the takum ring
+        # (a plain psum on bf16 would also *accumulate* in bf16, charging
+        # the wire format for narrow-sum error it didn't cause)
+        wire = xf.astype(jnp.bfloat16)
+        decode = lambda m: m.astype(jnp.float32)
+        own = xf if exact_local else decode(wire)
+        return _ring_reduce(wire, own, axis_name, decode, N, canonical_order)
+    assert is_takum(fmt), fmt
+    n = takum_width(fmt)
+    if n > 16:
+        raise ValueError(
+            f"compressed wire format {fmt!r} unsupported: the LUT decode "
+            "tabulates 2**n entries (use t8/t16, or f32/bf16 for wide wires)"
+        )
+    if sr_key is not None:
+        from repro.core.takum import takum_encode_sr
+
+        bits = takum_encode_sr(xf, sr_key, n)
+    else:
+        bits = takum_encode(xf, n)
+    decode = lambda m: _lut_decode(m, n)
+    own = xf if exact_local else decode(bits)
+    return _ring_reduce(bits, own, axis_name, decode, N, canonical_order)
+
+
+def compressed_pmean(x, axis_name, fmt: str = "t8", *, exact_local: bool = False,
+                     canonical_order: bool = True, sr_key=None):
+    """Mean-reduction variant (gradient sync).  Defaults to quantising the
+    local term so ring members agree up to summation order."""
+    N = axis_size(axis_name)
+    return compressed_psum(
+        x, axis_name, fmt, exact_local=exact_local,
+        canonical_order=canonical_order, sr_key=sr_key,
+    ) / N
 
 
 def wire_bytes_per_element(fmt: str, pods: int) -> int:
-    """Bytes per element on the wire for a transport format on a pods-wide ring."""
-    raise NotImplementedError(_MSG.format(name="wire_bytes_per_element"))
+    """Bytes per payload element crossing the wire on a ``pods``-wide ring.
+
+    A P-ring all-reduce sends P-1 full-payload messages per device; each
+    element travels as a ``fmt`` bit pattern.  f32 -> t16 halves this,
+    f32 -> t8 quarters it, independent of P.
+    """
+    assert fmt in FORMAT_BITS, fmt
+    return (pods - 1) * (FORMAT_BITS[fmt] // 8)

@@ -1,23 +1,66 @@
-"""Error-feedback compressed reduction — STUB (real implementation pending).
+"""Error-feedback (EF) compressed reduction.
 
-Every entry point raises ``NotImplementedError`` until the dist layer lands.
+Plain compressed psum commits one quantisation error per contribution per
+step; accumulated over T steps the error random-walks as ~sqrt(T).  Error
+feedback carries each worker's quantisation residual into its next
+contribution:
+
+    c_t   = g_t + e_{t-1}          (gradient + carried residual)
+    q_t   = Q(c_t)                 (takum encode -> the transmitted value)
+    e_t   = c_t - q_t              (new residual, stays local)
+    out_t = ring_sum_j q_t^(j)     (compressed psum of the q's)
+
+The per-step sums telescope: sum_t out_t = exact total - sum_j e_T^(j), so
+the *accumulated* error is bounded by the final residuals instead of growing
+with T — this is what lets takum8 gradient transport train at the
+uncompressed rate (beyond-paper lever; see DESIGN.md §7).
+
+The local term entering the ring is the *quantised* value ``q_t`` (not the
+exact f32): the residual bookkeeping must charge the worker exactly what the
+rest of the ring received.
 """
 
 from __future__ import annotations
 
-IS_STUB = True
+import jax
+import jax.numpy as jnp
 
-_MSG = (
-    "repro.dist.error_feedback is a stub: error-feedback compression has not "
-    "landed yet (see ROADMAP.md Open items). {name}() is not implemented."
-)
+from repro.core.takum import takum_encode
+from repro.quant.policy import is_takum, takum_width
+
+from .collectives import _lut_decode, _ring_reduce, axis_size
+
+IS_STUB = False
 
 
 def ef_init(params):
-    """Initialise the per-leaf error accumulator pytree."""
-    raise NotImplementedError(_MSG.format(name="ef_init"))
+    """Per-leaf f32 error accumulator pytree, zero-initialised."""
+    return jax.tree.map(lambda a: jnp.zeros(jnp.shape(a), jnp.float32), params)
 
 
-def ef_compressed_psum(g, err, axis_name, *, fmt="t8", **kw):
-    """Compressed psum with error feedback; returns (reduced, new_err)."""
-    raise NotImplementedError(_MSG.format(name="ef_compressed_psum"))
+def ef_compressed_psum(g, err, axis_name, fmt: str = "t8"):
+    """Compressed psum with error feedback; returns ``(reduced, new_err)``.
+
+    ``g`` and ``err`` are matching pytrees (or single arrays); must be called
+    inside ``shard_map`` over ``axis_name``.  ``reduced`` sums the
+    residual-corrected, quantised contributions of every ring member in f32.
+    """
+    assert is_takum(fmt), f"error feedback needs a takum wire format, got {fmt}"
+    n = takum_width(fmt)
+    N = axis_size(axis_name)
+
+    def one(gl, el):
+        c = gl.astype(jnp.float32) + el
+        bits = takum_encode(c, n)
+        decode = lambda m: _lut_decode(m, n)
+        q = decode(bits)
+        new_err = c - q
+        reduced = q if N == 1 else _ring_reduce(bits, q, axis_name, decode, N)
+        return reduced, new_err
+
+    flat_g, treedef = jax.tree.flatten(g)
+    flat_e = treedef.flatten_up_to(err)
+    pairs = [one(gl, el) for gl, el in zip(flat_g, flat_e)]
+    reduced = jax.tree.unflatten(treedef, [r for r, _ in pairs])
+    new_err = jax.tree.unflatten(treedef, [e for _, e in pairs])
+    return reduced, new_err

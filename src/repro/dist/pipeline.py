@@ -1,16 +1,73 @@
-"""Pipeline-parallel apply — STUB (real implementation pending).
+"""Pipeline parallelism: GPipe-style microbatched stage execution.
 
-Every entry point raises ``NotImplementedError`` until the dist layer lands.
+``pipeline_apply`` runs ``x``'s microbatches through ``nstages`` identical
+stages whose parameters are sharded over a mesh axis (one stage per mesh
+slice).  Schedule: the classic M + P - 1 tick wavefront — at tick t, stage p
+processes microbatch t - p; activations advance one stage per tick via
+``lax.ppermute`` (the only wire traffic: one microbatch of activations per
+tick per stage boundary).  Numerics are exactly the sequential composition
+(same ops, same order), which is what the dist test asserts.
+
+Bubble fraction is (P-1)/(M+P-1); callers pick M >> P to amortise.  The
+ppermute payloads are f32 here — compressing them with the takum wire codec
+(as :mod:`repro.dist.collectives` does for psum) is a one-line extension
+measured in the collectives bench, left out of the default path because
+activations (unlike gradient sums) feed directly into the next matmul.
 """
 
 from __future__ import annotations
 
-IS_STUB = True
+import jax
+import jax.numpy as jnp
+
+from ._compat import shard_map
+
+IS_STUB = False
 
 
-def pipeline_apply(stages, x, **kw):
-    """Run ``x`` through pipeline stages with microbatching."""
-    raise NotImplementedError(
-        "repro.dist.pipeline is a stub: pipeline parallelism has not landed "
-        "yet (see ROADMAP.md Open items). pipeline_apply() is not implemented."
+def pipeline_apply(stage_fn, stage_params, x, *, mesh, axis: str = "pipe"):
+    """Run microbatches through parameter-sharded pipeline stages.
+
+    Args:
+      stage_fn: ``(stage_weights, h) -> h`` for one stage (shapes preserved).
+      stage_params: pytree whose leaves have a leading ``nstages`` dim.
+      x: ``[M, microbatch, ...]`` input microbatches.
+      mesh: mesh containing ``axis``; its other axes are untouched.
+      axis: mesh axis name the stages are laid out over.
+
+    Returns the output of the final stage for every microbatch, replicated
+    over ``axis`` — shape ``[M, microbatch, ...]``.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    nstages = mesh.shape[axis]
+    M = x.shape[0]
+    lead = jax.tree.leaves(stage_params)[0].shape[0]
+    assert lead == nstages, f"stage_params lead dim {lead} != mesh axis {nstages}"
+
+    def body(w_local, x_all):
+        # w_local leaves are [1, ...] (this stage's slice); drop the stage dim
+        w = jax.tree.map(lambda a: a[0], w_local)
+        p = jax.lax.axis_index(axis)
+        perm = [(i, i + 1) for i in range(nstages - 1)]
+        recv = jnp.zeros(x_all.shape[1:], x_all.dtype)
+        out_buf = jnp.zeros_like(x_all)
+        for t in range(M + nstages - 1):
+            # stage 0 injects microbatch t (clamped: for t >= M it recomputes
+            # the last microbatch, whose output never reaches the final stage
+            # inside the window); later stages consume the permuted wavefront
+            inp = jnp.where(p == 0, x_all[min(t, M - 1)], recv)
+            out = stage_fn(w, inp)
+            m = t - (nstages - 1)
+            if 0 <= m < M:
+                # only the final stage's output is a real result; zeros from
+                # the other stages vanish in the psum broadcast below
+                out_buf = out_buf.at[m].set(jnp.where(p == nstages - 1, out, 0.0))
+            if nstages > 1:
+                recv = jax.lax.ppermute(out, axis, perm)
+        return jax.lax.psum(out_buf, axis)
+
+    fn = shard_map(
+        body, mesh=mesh, in_specs=(P(axis), P()), out_specs=P(), check_rep=False
     )
+    return fn(stage_params, x)

@@ -1,25 +1,178 @@
-"""Sharding rules for model/optimizer state — STUB (real implementation pending).
+"""Sharding rules: logical parameter/batch/cache layouts -> mesh PartitionSpecs.
 
-Intended surface: logical-axis -> mesh-axis rule tables and helpers that
-produce ``NamedSharding``s for params, optimizer state and KV caches.  Every
-entry point raises ``NotImplementedError`` until the dist layer lands.
+One rule table serves every assigned architecture.  Rules are keyed on
+``(leaf name, ndim)`` where the leaf name is the innermost dict key on the
+pytree path — this makes the table robust to *where* a tensor sits
+(raw params, takum ``QTensor.bits`` under the same key, AdamW moments that
+mirror the param tree) because the rule only sees the name and the rank.
+Unmatched leaves (norm gains, SSM params, scalar scales, step counters, rng
+keys) replicate, which is always correct.
+
+Layout (the standard 2D TP x DP of the dry-run deployment):
+
+    mesh axes   "data" (+"pod" folded in front for the batch dim), "model"
+    embed [V,d]          V over model  (vocab-sharded logits: the loss'
+                                        one-hot contraction reduces locally)
+    wq/wk/wv [L,d,Hhd]   heads over model (column parallel)
+    wo [L,Hhd,d]         contraction over model (row parallel -> psum)
+    mlp wi/wg [L,d,f]    f over model;  mlp wo [L,f,d]  f over model
+    moe wi/wg/wo [L,E,..] experts over model (GShard-grouped, no all-to-all)
+    KV cache [L,B,S,Kv,hd] B over data axes, S over model (decode TP)
+
+Batch dims shard over the data axes ("pod","data") — trailing axes are
+dropped until the batch divides evenly, so tiny CI batches degrade to fewer
+axes instead of erroring (manual pod axes require exact divisibility).
 """
 
 from __future__ import annotations
 
-IS_STUB = True
+from typing import Any, Optional
 
-_MSG = (
-    "repro.dist.sharding is a stub: the sharding layer has not landed yet "
-    "(see ROADMAP.md Open items). {name}() is not implemented."
-)
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.tree_util import DictKey
 
-
-def rules_for(config, mesh):
-    """Sharding rule table for a model config on a mesh."""
-    raise NotImplementedError(_MSG.format(name="rules_for"))
+IS_STUB = False
 
 
-def shard_params(params, mesh, rules=None):
-    """Apply sharding rules to a parameter pytree."""
-    raise NotImplementedError(_MSG.format(name="shard_params"))
+def _model(mesh) -> Optional[str]:
+    """The TP axis, or None when absent or trivial.  Size-1 axes are never
+    *named* in shardings: a size-1 mention changes nothing semantically but
+    trips an XLA partitioner abort (IsManualSubgroup) when a gather meets a
+    manual pod subgroup — see tests/test_dist.py."""
+    return "model" if mesh.shape.get("model", 1) > 1 else None
+
+
+def data_axes(mesh) -> tuple:
+    """Axes a global-batch dimension shards over (pod folds into data)."""
+    return tuple(
+        a for a in ("pod", "data") if a in mesh.axis_names and mesh.shape[a] > 1
+    )
+
+
+def batch_dim_axes(mesh, batch: Optional[int]) -> tuple:
+    """Largest prefix of the data axes that divides ``batch`` evenly."""
+    axes = data_axes(mesh)
+    if batch is None:
+        return axes
+    while axes:
+        prod = 1
+        for a in axes:
+            prod *= mesh.shape[a]
+        if batch % prod == 0:
+            return axes
+        axes = axes[:-1]
+    return ()
+
+
+def rules_for(config, mesh) -> dict:
+    """(leaf name, ndim) -> PartitionSpec rule table for ``config`` on ``mesh``.
+
+    ``config`` is accepted for future per-arch overrides; the base table is
+    architecture-independent (names + ranks identify the surface).
+    """
+    del config
+    m = _model(mesh)
+    col3 = P(None, None, m)   # [L, d, out]: output-column parallel
+    row3 = P(None, m, None)   # [L, in, d]: contraction parallel (psum at use)
+    moe4 = P(None, m, None, None)  # [L, E, ...]: expert parallel
+    return {
+        ("embed", 2): P(m, None),
+        ("lm_head", 2): P(None, m),
+        ("media_proj", 2): P(None, m),
+        ("wq", 3): col3, ("wk", 3): col3, ("wv", 3): col3,
+        ("wi", 3): col3, ("wg", 3): col3,
+        ("wi_s", 3): col3, ("wg_s", 3): col3,
+        ("wo", 3): row3, ("wo_s", 3): row3,
+        ("wi", 4): moe4, ("wg", 4): moe4, ("wo", 4): moe4,
+        ("router", 3): P(),  # [L, d, E] small; replicated router avoids skew
+    }
+
+
+def fit_spec(spec: P, shape, mesh) -> P:
+    """Drop mesh axes from dims they don't divide evenly (jit in_shardings
+    reject uneven layouts; e.g. hymba's 32001-vocab embedding stays
+    replicated instead of vocab-sharded)."""
+    dims = []
+    changed = False
+    for d, entry in enumerate(spec):
+        axes = entry if isinstance(entry, tuple) else (entry,) if entry else ()
+        prod = 1
+        for a in axes:
+            prod *= mesh.shape[a]
+        if axes and shape[d] % prod != 0:
+            changed = True
+            entry = None
+        dims.append(entry)
+    return P(*dims) if changed else spec
+
+
+def spec_for(path, leaf, rules: dict, mesh=None) -> P:
+    """Resolve one pytree leaf to a PartitionSpec via the rule table."""
+    ndim = len(leaf.shape)
+    names = [k.key for k in path if isinstance(k, DictKey)]
+    for name in reversed(names):
+        if (name, ndim) in rules:
+            spec = rules[(name, ndim)]
+            return fit_spec(spec, leaf.shape, mesh) if mesh is not None else spec
+    return P()
+
+
+def param_specs(config, params, mesh, *, rules: Optional[dict] = None):
+    """PartitionSpec tree matching ``params`` (arrays, shapes, or QTensors).
+
+    QTensor leaves flatten to (bits, scale); bits inherit the parameter's
+    rule by name+rank, scalar scales replicate — no special-casing needed.
+    """
+    rules = rules_for(config, mesh) if rules is None else rules
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: spec_for(path, leaf, rules, mesh), params
+    )
+
+
+def shard_params(params, mesh, rules: Optional[dict] = None, *, config=None):
+    """Apply sharding rules to a parameter pytree (device_put)."""
+    specs = param_specs(config, params, mesh, rules=rules)
+    return jax.device_put(params, named(mesh, specs))
+
+
+def batch_specs(config, mesh, *, kind: str, batch: Optional[int] = None):
+    """PartitionSpec tree for a model input batch.
+
+    ``kind`` in {"train", "prefill", "decode"}; ``batch`` (global batch
+    size) gates which data axes are usable (divisibility).
+    """
+    bd = batch_dim_axes(mesh, batch)
+    b = bd if bd else None
+    if kind in ("train", "prefill"):
+        specs: dict = {"tokens": P(b, None)}
+    elif kind == "decode":
+        specs = {"token": P(b)}
+    else:
+        raise ValueError(f"unknown batch kind: {kind}")
+    if config.family == "vlm":
+        specs["media"] = P(b, None, None)
+    return specs
+
+
+def cache_specs(config, cache, mesh):
+    """PartitionSpec tree for a ``KVCache``: batch over data axes, cache
+    sequence over model (the decode-TP layout the model's ``constrain``
+    annotations request)."""
+    m = _model(mesh)
+    k_shape = cache.k.shape  # [L, B, S, Kv, hd]
+    bd = batch_dim_axes(mesh, k_shape[1])
+    b = bd if bd else None
+    seq = m if k_shape[2] > 0 else None  # SSM families carry an empty KV
+    kv = fit_spec(P(None, b, seq, None, None), k_shape, mesh)
+    conv = P(None, b) if getattr(cache.conv, "ndim", 0) == 4 else P()
+    ssm = P(None, b) if getattr(cache.ssm, "ndim", 0) == 5 else P()
+    return type(cache)(k=kv, v=kv, pos=P(), conv=conv, ssm=ssm)
+
+
+def named(mesh, specs):
+    """Map a PartitionSpec tree to a NamedSharding tree on ``mesh``."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda s: isinstance(s, P),
+    )

@@ -1,25 +1,273 @@
-"""Multi-device train/eval step — STUB (real implementation pending).
+"""Multi-device train / prefill / serve steps.
 
-Intended surface: jit-compiled sharded train step (data-parallel batch axis,
-tensor-parallel model axis, takum-compressed gradient reduction).  Every
-entry point raises ``NotImplementedError`` until the dist layer lands.
+``make_train_step`` builds one step function that runs identically on a
+single device, a 2D data x model mesh (pure GSPMD: jit + in_shardings +
+activation constraints), and a 3D pod x data x model mesh.  On a multi-pod
+mesh the fwd/bwd runs in a **fully-manual** shard_map over every mesh axis
+(hierarchical DP): gradients reduce in f32 over the cheap intra-pod "data"
+links, then through the takum-compressed ring over the expensive inter-pod
+links (``QuantPolicy.grad_comm`` picks the wire format, with stochastic
+rounding per policy).  Fully manual because this XLA build rejects
+ppermute/all_gather/axis_index inside partially-auto regions — so TP does
+NOT compose with pod compression yet: params replicate across the manual
+region and a nontrivial "model" axis merely duplicates compute (see
+DESIGN.md §7 and the ROADMAP open item).
+
+Spec builders (``train_state_specs`` / ``param_specs`` / ...) derive their
+pytree structure from ``jax.eval_shape`` over the same constructors the
+callers use, so the spec trees always match the real state trees leaf for
+leaf (QTensor moments included).
 """
 
 from __future__ import annotations
 
-IS_STUB = True
+from typing import Any, NamedTuple
 
-_MSG = (
-    "repro.dist.step is a stub: the distributed step has not landed yet "
-    "(see ROADMAP.md Open items). {name}() is not implemented."
-)
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.optim import adamw_init, adamw_update
+from repro.quant.policy import is_takum
+from repro.quant.qtensor import QTensor, dequantize, quantize
+
+from . import actx
+from . import sharding as shd
+from ._compat import shard_map
+from .collectives import compressed_pmean
+
+IS_STUB = False
+
+P = jax.sharding.PartitionSpec
 
 
-def make_train_step(model, optimizer, mesh, **kw):
-    """Build the sharded train step function."""
-    raise NotImplementedError(_MSG.format(name="make_train_step"))
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any  # AdamWState
+    rng: Any
 
 
-def train_step(state, batch, **kw):
-    """One sharded optimization step."""
-    raise NotImplementedError(_MSG.format(name="train_step"))
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+
+def _has_pod(mesh) -> bool:
+    return "pod" in mesh.axis_names and mesh.shape["pod"] > 1
+
+
+def make_train_step(cfg, mesh, *, lr=3e-4, aux_weight: float = 0.01,
+                    master_dtype=jnp.float32):
+    """Build ``step(state, batch) -> (state, metrics)`` for ``cfg`` on ``mesh``.
+
+    Metrics: ``loss`` (ce + aux), ``ce``, ``aux`` — all scalars.  On meshes
+    with a nontrivial "pod" axis the gradient mean over pods runs through
+    ``compressed_pmean`` in ``cfg.quant.grad_comm`` format; everything else
+    (data-parallel reduction, TP psums) is GSPMD under jit.
+    """
+    del master_dtype  # the step is dtype-generic; accepted for API symmetry
+    pod = _has_pod(mesh)
+
+    def _loss(params, batch):
+        return T.loss_fn(cfg, params, batch, aux_weight=aux_weight)
+
+    if pod:
+        fmt = cfg.quant.grad_comm
+        wire_sr = cfg.quant.stochastic_rounding and is_takum(fmt)
+
+        def fwd_bwd_local(batch_axes):
+            def f(params, batch, wire_key):
+                (loss, metrics), grads = jax.value_and_grad(_loss, has_aux=True)(
+                    params, batch
+                )
+                data_axes = tuple(a for a in batch_axes if a != "pod")
+                if wire_sr:
+                    # decorrelate SR noise across pods; data/model replicas
+                    # of one pod share the key so their rings stay bitwise
+                    # identical (see collectives.compressed_psum)
+                    wire_key = jax.random.fold_in(
+                        wire_key, jax.lax.axis_index("pod")
+                    )
+
+                # one flat payload -> one data-axis pmean + ONE compressed
+                # ring, not one per leaf: the codec is element-wise so the
+                # numerics are identical, but P-1 large messages beat
+                # leaves*(P-1) tiny latency-bound ones on a real interconnect
+                flat, treedef = jax.tree.flatten(grads)
+                sizes = [g.size for g in flat]
+                payload = jnp.concatenate(
+                    [g.astype(jnp.float32).ravel() for g in flat]
+                )
+                if data_axes:
+                    payload = jax.lax.pmean(payload, data_axes)
+                payload = compressed_pmean(
+                    payload, "pod", fmt, sr_key=wire_key if wire_sr else None
+                )
+                parts = jnp.split(payload, list(np.cumsum(sizes))[:-1])
+                grads = jax.tree.unflatten(
+                    treedef,
+                    [p.reshape(g.shape).astype(g.dtype)
+                     for p, g in zip(parts, flat)],
+                )
+                loss = jax.lax.pmean(loss, batch_axes)
+                metrics = jax.tree.map(
+                    lambda m: jax.lax.pmean(m, batch_axes), metrics
+                )
+                return loss, metrics, grads
+
+            return f
+
+        def fwd_bwd(params, batch, wire_key):
+            # built at trace time: the usable batch axes depend on the
+            # (now known) global batch size
+            B = batch["tokens"].shape[0]
+            axes = shd.batch_dim_axes(mesh, B)
+            if "pod" not in axes:
+                raise ValueError(
+                    f"global batch {B} must divide by the pod axis "
+                    f"({mesh.shape['pod']}) for compressed pod reduction"
+                )
+            return shard_map(
+                fwd_bwd_local(axes), mesh=mesh,
+                in_specs=(P(), P(axes), P()), out_specs=(P(), P(), P()),
+                check_rep=False,
+            )(params, batch, wire_key)
+    else:
+
+        def fwd_bwd(params, batch, wire_key):
+            del wire_key  # single-pod: GSPMD reduces grads in f32
+            def loss_in_ctx(params, batch):
+                with actx.use_mesh(mesh):
+                    return _loss(params, batch)
+
+            (loss, metrics), grads = jax.value_and_grad(loss_in_ctx, has_aux=True)(
+                params, batch
+            )
+            return loss, metrics, grads
+
+    def step(state: TrainState, batch):
+        rng, sr_key, wire_key = jax.random.split(state.rng, 3)
+        loss, metrics, grads = fwd_bwd(state.params, batch, wire_key)
+        use_sr = cfg.quant.stochastic_rounding and is_takum(cfg.quant.opt_state)
+        params, opt = adamw_update(
+            grads, state.opt, state.params, lr=lr, fmt=cfg.quant.opt_state,
+            key=sr_key if use_sr else None,
+        )
+        out = {"loss": loss, "ce": metrics["ce"], "aux": metrics["aux"]}
+        return TrainState(params=params, opt=opt, rng=rng), out
+
+    return step
+
+
+def train_step(state, batch, *, cfg, mesh, **kw):
+    """One-off convenience: builds the step and applies it (untraced)."""
+    return make_train_step(cfg, mesh, **kw)(state, batch)
+
+
+# ---------------------------------------------------------------------------
+# shapes and specs
+# ---------------------------------------------------------------------------
+
+
+def param_shapes(cfg, dtype=jnp.float32):
+    """ShapeDtypeStruct tree of the raw (training) parameter pytree."""
+    return jax.eval_shape(
+        lambda: T.init_params(cfg, jax.random.PRNGKey(0), dtype=dtype)
+    )
+
+
+def state_shapes(cfg, *, master_dtype=jnp.float32):
+    """ShapeDtypeStruct tree of the full TrainState (params + AdamW + rng)."""
+
+    def mk():
+        params = T.init_params(cfg, jax.random.PRNGKey(0), dtype=master_dtype)
+        return TrainState(
+            params=params,
+            opt=adamw_init(params, fmt=cfg.quant.opt_state),
+            rng=jax.random.PRNGKey(1),
+        )
+
+    return jax.eval_shape(mk)
+
+
+def train_state_specs(cfg, mesh, *, master_dtype=jnp.float32):
+    """PartitionSpec tree matching :func:`state_shapes` on ``mesh``.
+
+    Params follow the TP rule table; AdamW moments mirror their parameter's
+    spec (QTensor bits by name+rank, scalar scales replicated); step counter
+    and rng replicate.  No surface is sharded over "pod" — parameters are
+    replicated across pods (plain multi-pod DP), which is also what the
+    manual-pod compressed-gradient path requires.
+    """
+    shapes = state_shapes(cfg, master_dtype=master_dtype)
+    rules = shd.rules_for(cfg, mesh)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: shd.spec_for(path, leaf, rules, mesh), shapes
+    )
+
+
+def train_state_specs_nopod(cfg, mesh, *, master_dtype=jnp.float32):
+    """Alias of :func:`train_state_specs` guaranteed pod-free (the rule table
+    never uses "pod"; this name documents the invariant at call sites)."""
+    return train_state_specs(cfg, mesh, master_dtype=master_dtype)
+
+
+# ---------------------------------------------------------------------------
+# serving: quantised weights, prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def quantize_params(cfg, params):
+    """Pack weights into ``cfg.quant.weights`` storage (takum -> QTensor with
+    per-tensor power-of-two scale; norm gains and other 1D leaves stay f32)."""
+    fmt = cfg.quant.weights
+    if not is_takum(fmt):
+        dt = jnp.bfloat16 if fmt == "bf16" else jnp.float32
+        return jax.tree.map(lambda a: a.astype(dt), params)
+
+    def q(a):
+        if a.ndim >= 2:
+            return quantize(a.astype(jnp.float32), fmt, scaled=True)
+        return a.astype(jnp.float32)
+
+    return jax.tree.map(q, params)
+
+
+def dequantize_params(params):
+    """Inverse of :func:`quantize_params` (QTensor -> f32, rest unchanged)."""
+    return jax.tree.map(
+        lambda a: dequantize(a) if isinstance(a, QTensor) else a,
+        params, is_leaf=lambda a: isinstance(a, QTensor),
+    )
+
+
+def serve_param_shapes(cfg):
+    """ShapeDtypeStruct tree of the quantised serving parameter pytree."""
+    return jax.eval_shape(
+        lambda: quantize_params(
+            cfg, T.init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+        )
+    )
+
+
+def make_prefill_step(cfg, mesh):
+    """``step(params, batch) -> (last_logits, cache)`` (quantised weights)."""
+
+    def step(params, batch):
+        p = dequantize_params(params)
+        with actx.use_mesh(mesh):
+            return T.prefill(cfg, p, batch["tokens"], batch.get("media"))
+
+    return step
+
+
+def make_serve_step(cfg, mesh):
+    """``step(params, batch, cache) -> (logits, cache)`` single-token decode."""
+
+    def step(params, batch, cache):
+        p = dequantize_params(params)
+        with actx.use_mesh(mesh):
+            return T.decode_step(cfg, p, batch["token"], cache, batch.get("media"))
+
+    return step

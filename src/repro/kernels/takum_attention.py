@@ -13,6 +13,16 @@ softmax with running (max, denom, acc) in VMEM scratch across the S blocks.
 Arbitrary sequence lengths are supported via a padded edge tile: padded
 logit columns are masked to -inf (-> zero softmax weight) and padded V rows
 are masked to bit pattern 0 (-> decode 0.0) so the weighted sum stays clean.
+
+Arbitrary head dims d and GQA groups g are supported the same way as S:
+blocks are padded up to TPU tile alignment (d -> lane multiple, g ->
+sublane multiple) and the padding lanes are masked *inside the kernel* —
+q's padded g rows / d columns to 0.0, K/V's padded d columns to bit pattern
+0 (decode 0.0).  No operand is ever copied: the packed KV cache streams
+through unchanged (the whole point of the kernel is that packed-cache read)
+and the out-of-range output rows/columns are dropped by the clipped store.
+Exactness of the real rows/columns is preserved because the extra terms in
+every contraction are exact zeros.
 """
 
 from __future__ import annotations
@@ -24,13 +34,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .common import choose_block, decode_takum_f32, dim_mask, interpret_default
+from .common import choose_block, decode_takum_f32, dim_mask, interpret_default, round_up
 from .lut import decode_table_operand, decode_takum_lut, resolve_impl
 
 _LANE = 128
+_SUBLANE = 8
 
 
-def _decode_attn_kernel(n, impl, S, bs, scale, *refs):
+def _decode_attn_kernel(n, impl, S, bs, g, d, scale, *refs):
     if impl == "lut":
         tab_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref = refs
         decode = lambda bits: decode_takum_lut(tab_ref[...], bits)
@@ -46,14 +57,27 @@ def _decode_attn_kernel(n, impl, S, bs, scale, *refs):
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0, 0]  # [g, d] f32
-    vb = v_ref[0, 0]  # [bs, d] packed bits
+    q = q_ref[0, 0]  # [gp, dp] f32
+    gp, dp = q.shape
+    if gp != g:
+        # padded q rows -> 0.0 (uniform softmax over finite values; the rows
+        # are dropped by the clipped output store)
+        q = jnp.where(dim_mask(q.shape, 0, g, gp, 0), q, 0.0)
+    if dp != d:
+        # padded d lanes: q cols -> 0.0, K/V cols -> bits 0 -> decode 0.0,
+        # so every contraction only gains exact-zero terms
+        q = jnp.where(dim_mask(q.shape, 1, d, dp, 0), q, 0.0)
+    kb = k_ref[0, 0]  # [bs, dp] packed bits
+    vb = v_ref[0, 0]
+    if dp != d:
+        kb = jnp.where(dim_mask(kb.shape, 1, d, dp, 0), kb, 0)
+        vb = jnp.where(dim_mask(vb.shape, 1, d, dp, 0), vb, 0)
     if S % bs:
         # padded V rows -> bits 0 -> decode 0.0 (their weight is 0 below, but
         # 0 * garbage-NaN would still poison the accumulator)
         vb = jnp.where(dim_mask(vb.shape, 0, S, bs, s), vb, 0)
-    k = decode(k_ref[0, 0])  # [bs, d]
-    v = decode(vb)  # [bs, d]
+    k = decode(kb)  # [bs, dp]
+    v = decode(vb)
 
     logits = jax.lax.dot_general(
         q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
@@ -88,7 +112,8 @@ def takum_decode_attention(
     """One-token decode attention; returns [B, H, d] f32.
 
     q: [B, H, d] f32; k_bits/v_bits: [B, Hkv, S, d] packed takum-n.  S may be
-    any length (padded edge tile); d and g = H/Hkv are whole blocks.
+    any length (padded edge tile); d and g = H/Hkv may be arbitrary
+    (zero-padded to lane/sublane alignment outside the kernel).
     """
     interpret = interpret_default() if interpret is None else interpret
     impl = resolve_impl(decode_impl, n)
@@ -96,15 +121,19 @@ def takum_decode_attention(
     _, Hkv, S, _ = k_bits.shape
     assert H % Hkv == 0
     g = H // Hkv
-    bs = choose_block(S, block_s, 8)
-    scale = float(d) ** -0.5
+    bs = choose_block(S, block_s, _SUBLANE)
+    scale = float(d) ** -0.5  # true head dim: padding adds exact-zero terms
 
     qg = q.reshape(B, Hkv, g, d)
+    dp, gp = round_up(d, _LANE), round_up(g, _SUBLANE)
+
     grid = (B, Hkv, pl.cdiv(S, bs))
+    # blocks are tile-aligned covers of (g, d); edge lanes are masked inside
+    # the kernel and the packed KV cache streams through uncopied
     in_specs = [
-        pl.BlockSpec((1, 1, g, d), lambda b, h, s: (b, h, 0, 0)),
-        pl.BlockSpec((1, 1, bs, d), lambda b, h, s: (b, h, s, 0)),
-        pl.BlockSpec((1, 1, bs, d), lambda b, h, s: (b, h, s, 0)),
+        pl.BlockSpec((1, 1, gp, dp), lambda b, h, s: (b, h, 0, 0)),
+        pl.BlockSpec((1, 1, bs, dp), lambda b, h, s: (b, h, s, 0)),
+        pl.BlockSpec((1, 1, bs, dp), lambda b, h, s: (b, h, s, 0)),
     ]
     args = [qg, k_bits, v_bits]
     if impl == "lut":
@@ -112,15 +141,15 @@ def takum_decode_attention(
         in_specs.insert(0, pl.BlockSpec(tab.shape, lambda b, h, s: (0, 0)))
         args.insert(0, tab)
     out = pl.pallas_call(
-        functools.partial(_decode_attn_kernel, n, impl, S, bs, scale),
+        functools.partial(_decode_attn_kernel, n, impl, S, bs, g, d, scale),
         grid=grid,
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, 1, g, d), lambda b, h, s: (b, h, 0, 0)),
+        out_specs=pl.BlockSpec((1, 1, gp, dp), lambda b, h, s: (b, h, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((B, Hkv, g, d), jnp.float32),
         scratch_shapes=[
-            pltpu.VMEM((g, _LANE), jnp.float32),
-            pltpu.VMEM((g, _LANE), jnp.float32),
-            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((gp, _LANE), jnp.float32),
+            pltpu.VMEM((gp, _LANE), jnp.float32),
+            pltpu.VMEM((gp, dp), jnp.float32),
         ],
         interpret=interpret,
     )(*args)

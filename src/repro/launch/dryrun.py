@@ -1,5 +1,13 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# 512 fake host devices for the production meshes — but never clobber an
+# existing count: the CI-sized small-mesh dry-run (tests/test_dist.py) runs
+# with 8 devices fixed by the caller before jax initialises.
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=512"
+    ).strip()
 
 """Multi-pod dry-run: AOT lower + compile every (arch x shape x mesh) cell.
 

@@ -24,6 +24,25 @@ def make_test_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def parse_mesh(spec: str):
+    """Mesh from a CLI spec: "DxM" -> (data, model), "PxDxM" -> (pod, data,
+    model).  "1x1" is the single-device degenerate mesh."""
+    dims = tuple(int(d) for d in spec.lower().split("x"))
+    if len(dims) == 2:
+        return jax.make_mesh(dims, ("data", "model"))
+    if len(dims) == 3:
+        return jax.make_mesh(dims, ("pod", "data", "model"))
+    raise ValueError(f"mesh spec must be DxM or PxDxM, got {spec!r}")
+
+
 def data_axes(mesh) -> tuple:
-    """Axes a global-batch dimension shards over (pod folds into data)."""
-    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    """Axes a global-batch dimension shards over (pod folds into data).
+
+    Delegates to :func:`repro.dist.sharding.data_axes` — the single source
+    of truth, which also drops size-1 axes (naming them trips an XLA
+    IsManualSubgroup abort near manual pod subgroups).  Imported lazily so
+    importing this module still touches no jax device state.
+    """
+    from repro.dist.sharding import data_axes as _data_axes
+
+    return _data_axes(mesh)

@@ -23,7 +23,9 @@ import jax.numpy as jnp
 
 from repro import configs
 from repro.data import SyntheticLM
+from repro.dist import sharding as shd
 from repro.dist import step as dstep
+from repro.launch.mesh import parse_mesh
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.optim import adamw_init
@@ -62,15 +64,39 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
     ap.add_argument("--ckpt-every", type=int, default=100)
     ap.add_argument("--metrics-out", default="")
+    ap.add_argument("--mesh", default="1x1",
+                    help="device mesh, e.g. 2x4 (data x model) or 2x2x2 "
+                         "(pod x data x model); pod meshes use the "
+                         "takum-compressed gradient ring")
     args = ap.parse_args()
 
     cfg, pipe = build(args.arch, smoke=args.smoke, policy=args.policy,
                       seq=args.seq, batch=args.batch)
     print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M policy={args.policy}")
 
-    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    mesh = parse_mesh(args.mesh)
     base_step = dstep.make_train_step(cfg, mesh, lr=args.lr)
-    step_fn = jax.jit(base_step, donate_argnums=(0,))
+    sharded = any(v > 1 for v in mesh.shape.values())
+
+    def make_batch(s):
+        b = pipe.batch(s)
+        if cfg.family == "vlm":
+            b["media"] = pipe.media_stub(s, cfg.num_media_tokens, cfg.media_d)
+        return b
+
+    if sharded:
+        sspec = shd.named(mesh, dstep.train_state_specs(cfg, mesh))
+        bspec = shd.named(
+            mesh, shd.batch_specs(cfg, mesh, kind="train", batch=args.batch)
+        )
+        step_fn = jax.jit(base_step, in_shardings=(sspec, bspec),
+                          out_shardings=(sspec, None), donate_argnums=(0,))
+        batch_fn = lambda s: jax.device_put(make_batch(s), bspec)
+        print(f"mesh={dict(mesh.shape)} (dist.step routing)")
+    else:
+        sspec = None
+        step_fn = jax.jit(base_step, donate_argnums=(0,))
+        batch_fn = make_batch
 
     def init_state():
         params = T.init_params(cfg, jax.random.PRNGKey(0))
@@ -84,8 +110,9 @@ def main():
             log_every=10,
         ),
         step_fn,
-        lambda s: pipe.batch(s),
+        batch_fn,
         init_state,
+        state_sharding=sspec,
     )
     t0 = time.time()
     loop.run()

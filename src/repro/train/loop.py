@@ -66,14 +66,25 @@ class TrainLoop:
         batch_fn: Callable[[int], Any],
         init_state: Callable[[], Any],
         failure_hook: Optional[Callable[[int], None]] = None,
+        state_sharding: Any = None,
     ):
         self.cfg = cfg
         self.step_fn = step_fn
         self.batch_fn = batch_fn
         self.init_state = init_state
         self.failure_hook = failure_hook
+        # NamedSharding tree (repro.dist.sharding.named over the state specs):
+        # initial and checkpoint-restored state are placed onto the mesh with
+        # it — restore is host-numpy, so elastic restarts re-place onto
+        # whatever mesh the current run uses
+        self.state_sharding = state_sharding
         self.ckpt = CheckpointManager(cfg.ckpt_dir, fmt=cfg.ckpt_fmt, keep=cfg.keep)
         self.metrics_history: list[dict] = []
+
+    def _place(self, state):
+        if self.state_sharding is None:
+            return state
+        return jax.device_put(state, self.state_sharding)
 
     def _restore_or_init(self):
         state = self.init_state()
@@ -82,10 +93,19 @@ class TrainLoop:
             latest = self.ckpt.latest_step()
             if latest is not None:
                 host = self.ckpt.restore(latest, state)
-                state = jax.tree.map(lambda e, h: jax.device_put(np.asarray(h)), state, host)
+                if self.state_sharding is None:
+                    state = jax.tree.map(
+                        lambda e, h: jax.device_put(np.asarray(h)), state, host
+                    )
+                else:
+                    state = jax.device_put(
+                        jax.tree.map(lambda e, h: np.asarray(h), state, host),
+                        self.state_sharding,
+                    )
                 start = latest
                 log.info("resumed from step %d", latest)
-        return state, start
+                return state, start
+        return self._place(state), start
 
     def run(self) -> Any:
         state, start = self._restore_or_init()

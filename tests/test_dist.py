@@ -14,11 +14,7 @@ import sys
 
 import pytest
 
-# the dist layer is currently a stub package (clear NotImplementedErrors);
-# skip the whole module until the real implementation lands
-_collectives = pytest.importorskip("repro.dist.collectives")
-if getattr(_collectives, "IS_STUB", False):
-    pytest.skip("repro.dist is a stub (real dist layer pending)", allow_module_level=True)
+pytest.importorskip("repro.dist.collectives")
 
 _SRC = os.path.join(os.path.dirname(__file__), "../src")
 

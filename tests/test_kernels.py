@@ -153,6 +153,32 @@ def test_takum_matmul_single_ktile_bit_exact(impl):
     np.testing.assert_array_equal(got, want)
 
 
+EXOTIC_ATTN_SHAPES = [
+    # (B, H, Hkv, S, d, block_s): d not lane-aligned and/or g not a sublane
+    # multiple — the padded/masked d+g path (whole-block before this PR)
+    (2, 6, 2, 131, 40, 64),   # g=3, d=40, prime-ish S
+    (1, 5, 1, 100, 24, 32),   # MQA g=5, d=24
+    (2, 12, 4, 96, 96, 32),   # g=3, d=96 (sub-lane but 8-aligned)
+    (1, 7, 7, 65, 17, 32),    # MHA g=1, odd d=17
+]
+
+
+@pytest.mark.parametrize("n", NS)
+@pytest.mark.parametrize("impl", ("bits", "lut"))
+@pytest.mark.parametrize("dims", EXOTIC_ATTN_SHAPES)
+def test_takum_decode_attention_exotic_dims_vs_ref(n, impl, dims):
+    """Arbitrary head dim d and GQA group g: zero-padded to lane/sublane
+    alignment, results exact vs the unpadded reference."""
+    B, H, Hkv, S, d, bs = dims
+    q = jnp.asarray(_rand((B, H, d), 1.0, seed=8))
+    k = takum_encode(jnp.asarray(_rand((B, Hkv, S, d), 1.0, seed=9)), n)
+    v = takum_encode(jnp.asarray(_rand((B, Hkv, S, d), 1.0, seed=10)), n)
+    got = np.asarray(takum_decode_attention(q, k, v, n, block_s=bs, decode_impl=impl))
+    want = np.asarray(ref.decode_attention_ref(q, k, v, n))
+    assert np.all(np.isfinite(got))
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
 @pytest.mark.parametrize("n", NS)
 @pytest.mark.parametrize("impl", ("bits", "lut"))
 @pytest.mark.parametrize("dims", [(1, 4, 2, 100, 64, 64), (2, 8, 8, 257, 128, 128)])
