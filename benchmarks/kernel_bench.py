@@ -1,11 +1,14 @@
-"""Kernel microbenches: takum codec / dequant-matmul + persistent JSON record.
+"""Kernel microbenches: wire-format codec / dequant-matmul + persistent JSON.
 
 On this CPU container the Pallas kernels execute in interpret mode, so wall
 times measure the *reference semantics*, not TPU performance; the TPU-relevant
 outputs are (a) the A/B between the two in-kernel decode implementations
 ("bits" = branch-free integer decode vs "lut" = table gather) measured on the
-same harness, and (b) the analytic HBM-traffic model per format (the roofline
-memory-term input).
+same harness, (b) the *format matrix* — the same decode/matmul/attention
+kernels run for every registered wire format (t8/t16 takum vs OFP8
+e4m3/e5m2 vs bf16), so the JSON records the paper's takum-vs-zoo deltas on
+identical kernels — and (c) the analytic HBM-traffic model per format (the
+roofline memory-term input).
 
 ``--json`` writes ``BENCH_kernels.json`` at the repo root: the perf
 trajectory baseline every future perf PR is judged against.  ``--smoke``
@@ -26,13 +29,16 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core.formats import kernel_wire_names, wire_format
 from repro.core.takum import takum_encode
-from repro.kernels.common import decode_takum_f32, encode_takum_from_f32
+from repro.kernels import ref as kref
 from repro.kernels.lut import (
+    decode_bits_fn,
     decode_table_operand,
-    decode_takum_lut,
+    decode_wire_lut,
     encode8_table_operands,
-    encode_takum8_lut,
+    encode_bits_fn,
+    encode_wire8_lut,
 )
 from repro.kernels.takum_attention import takum_decode_attention
 from repro.kernels.takum_matmul import takum_matmul
@@ -81,79 +87,95 @@ def hbm_model(rows: int, cols: int) -> dict:
     """Bytes to stream a [rows, cols] weight/KV tile per format (the paper's
     memory-wall argument quantified for the VDPPT dequant path)."""
     return {fmt: rows * cols * bpe for fmt, bpe in
-            [("f32", 4), ("bf16", 2), ("takum16", 2), ("takum8", 1)]}
+            [("f32", 4), ("bf16", 2), ("takum16", 2), ("takum8", 1),
+             ("e4m3", 1), ("e5m2", 1)]}
+
+
+#: the format matrix every kernel bench sweeps: uniform takum vs the
+#: IEEE-derived zoo on identical kernels (the paper's head-to-head)
+WIRE_MATRIX = ("t8", "t16", "e4m3", "e5m2", "bf16")
 
 
 def bench_decode(smoke: bool) -> list[dict]:
-    """Decode throughput, both impls, in two execution modes.
+    """Decode throughput for the whole format matrix, both impls, two modes.
 
     ``op_dispatch`` (headline): eager per-op execution, the interpret-style
     harness — cost tracks the *instruction count* of the decode body (~40
-    integer ops for "bits" vs one gather for "lut"), which is the quantity
-    that maps to TPU VPU issue slots.  ``fused``: one jitted XLA kernel —
-    on CPU, LLVM vectorises the whole bit chain so the two impls converge;
-    recorded as the sanity floor.  See DESIGN.md §3.
+    integer ops for takum "bits", ~15 for OFP8, 2 for bf16, vs one gather
+    for "lut"), which is the quantity that maps to TPU VPU issue slots.
+    ``fused``: one jitted XLA kernel — on CPU, LLVM vectorises the whole
+    bit chain so the impls converge; recorded as the sanity floor.  The
+    LUT rows are the format-agnostic gather: identical kernel, different
+    table.  See DESIGN.md §3.
     """
     out = []
     rng = np.random.default_rng(0)
-    for n in (8, 16):
-        tab = decode_table_operand(n)
+    for fmt in WIRE_MATRIX:
+        wf = wire_format(fmt)
+        n = wf.nbits
+        tab = decode_table_operand(fmt)
+        bits_decode = decode_bits_fn(fmt)
         modes = {
             "op_dispatch": {
                 "elems": 1 << 19 if smoke else 1 << 20,
                 "reps": 3 if smoke else 7,
-                "bits": lambda b, n=n: decode_takum_f32(b, n),
-                "lut": lambda b, tab=tab: decode_takum_lut(tab, b),
+                "bits": bits_decode,
+                "lut": lambda b, tab=tab: decode_wire_lut(tab, b),
             },
             "fused": {
                 "elems": 1 << 20 if smoke else 1 << 22,
                 "reps": 5 if smoke else 11,
-                "bits": jax.jit(lambda b, n=n: decode_takum_f32(b, n)),
-                "lut": jax.jit(lambda b, tab=tab: decode_takum_lut(tab, b)),
+                "bits": jax.jit(bits_decode),
+                "lut": jax.jit(lambda b, tab=tab: decode_wire_lut(tab, b)),
             },
         }
         for mode, cfg in modes.items():
             elems = cfg["elems"]
             bits = jnp.asarray(
-                rng.integers(0, 1 << n, size=elems).astype({8: np.uint8, 16: np.uint16}[n])
+                rng.integers(0, 1 << n, size=elems).astype(wf.np_storage)
             )
             for impl in ("bits", "lut"):
                 us = _time(cfg[impl], bits, reps=cfg["reps"])
                 out.append({
-                    "op": "decode", "mode": mode, "n": n, "impl": impl,
-                    "elems": elems, "us": round(us, 1),
+                    "op": "decode", "mode": mode, "fmt": fmt, "n": n,
+                    "impl": impl, "elems": elems, "us": round(us, 1),
                     "melem_s": round(elems / us, 1),
                 })
     return out
 
 
 def bench_encode(smoke: bool) -> list[dict]:
-    """Element-wise encode throughput: bit-twiddle everywhere, LUT for takum8."""
+    """Element-wise encode throughput across the format matrix: the family's
+    bit-twiddle everywhere, plus the exponent-byte LUT for 8-bit formats."""
     elems = (1 << 20) if smoke else (1 << 22)
     reps = 3 if smoke else 10
     rng = np.random.default_rng(1)
     x = jnp.asarray((rng.standard_normal(elems) * 2.0).astype(np.float32))
-    meta, thr = encode8_table_operands()
     out = []
-    impls = {
-        8: {
-            "bits": jax.jit(lambda v: encode_takum_from_f32(v, 8)),
-            "lut": jax.jit(lambda v: encode_takum8_lut(v, meta, thr)),
-        },
-        16: {"bits": jax.jit(lambda v: encode_takum_from_f32(v, 16))},
-    }
-    for n, by_impl in impls.items():
+    for fmt in WIRE_MATRIX:
+        wf = wire_format(fmt)
+        by_impl = {"bits": jax.jit(encode_bits_fn(fmt))}
+        if wf.supports_lut_encode:
+            meta, thr = encode8_table_operands(fmt)
+            by_impl["lut"] = jax.jit(
+                lambda v, meta=meta, thr=thr, fmt=fmt: encode_wire8_lut(
+                    v, meta, thr, fmt
+                )
+            )
         for impl, f in by_impl.items():
             us = _time(f, x, reps=reps)
             out.append({
-                "op": "encode", "n": n, "impl": impl, "elems": elems,
-                "us": round(us, 1), "melem_s": round(elems / us, 1),
+                "op": "encode", "fmt": fmt, "n": wf.nbits, "impl": impl,
+                "elems": elems, "us": round(us, 1),
+                "melem_s": round(elems / us, 1),
             })
     return out
 
 
 def bench_matmul(smoke: bool) -> list[dict]:
-    """Dequant-matmul GFLOP/s for both decode impls (pallas, interpret on CPU)."""
+    """Dequant-matmul GFLOP/s (pallas, interpret on CPU): both decode impls
+    for takum8 across the shape sweep, plus the format matrix (default impl)
+    on the lead shape — takum-vs-OFP8 on the identical kernel."""
     shapes = MM_SHAPES_SMOKE if smoke else MM_SHAPES
     reps = 2 if smoke else 5
     rng = np.random.default_rng(2)
@@ -164,22 +186,42 @@ def bench_matmul(smoke: bool) -> list[dict]:
         flops = 2 * M * K * N
         aligned = all(d % 128 == 0 for d in (M, K, N))
         for impl in ("bits", "lut"):
-            f = lambda a, b, impl=impl: takum_matmul(a, b, 8, decode_impl=impl)
+            f = lambda a, b, impl=impl: takum_matmul(a, b, "t8", decode_impl=impl)
             us = _time(f, x, wb, reps=reps)
             out.append({
-                "op": "dequant_matmul", "n": 8, "impl": impl,
+                "op": "dequant_matmul", "fmt": "t8", "n": 8, "impl": impl,
                 "M": M, "K": K, "N": N, "aligned": aligned,
                 "us": round(us, 1), "gflop_s": round(flops / us / 1e3, 2),
             })
+    # format matrix on the lead shape, per-format default impl
+    M, K, N = shapes[0]
+    flops = 2 * M * K * N
+    x = jnp.asarray(rng.standard_normal((M, K)).astype(np.float32))
+    w = jnp.asarray((rng.standard_normal((K, N)) * 0.2).astype(np.float32))
+    for fmt in WIRE_MATRIX:
+        if fmt == "t8":
+            continue  # already covered with both impls above
+        wb = kref.codec_encode_ref(w, fmt)
+        f = lambda a, b, fmt=fmt: takum_matmul(a, b, fmt)
+        us = _time(f, x, wb, reps=reps)
+        out.append({
+            "op": "dequant_matmul", "fmt": fmt, "n": wire_format(fmt).nbits,
+            "impl": "default", "M": M, "K": K, "N": N,
+            "aligned": all(d % 128 == 0 for d in (M, K, N)),
+            "us": round(us, 1), "gflop_s": round(flops / us / 1e3, 2),
+        })
     return out
 
 
 def bench_attention(smoke: bool) -> list[dict]:
-    """Decode-attention tokens/s over a packed takum KV cache (both impls).
+    """Decode-attention tokens/s over a packed wire-format KV cache.
 
     One call = one generated token per batch element against an S-long
     cache, so tokens/s = B / wall; the HBM-side story is the packed cache
-    read (S * d * Hkv * n/8 bytes per head block).
+    read (S * d * Hkv * n/8 bytes per head block).  Takum widths run both
+    impls on raw random bits (NaR zeroed); the other formats run their
+    default impl on an encoded cache (random bits would contain NaN/Inf
+    patterns, which a real encoded cache never holds).
     """
     B, H, Hkv, S, d = (1, 4, 2, 256, 64) if smoke else (2, 8, 2, 1024, 64)
     bs = 128 if smoke else 256
@@ -188,6 +230,7 @@ def bench_attention(smoke: bool) -> list[dict]:
     q = jnp.asarray(rng.standard_normal((B, H, d)).astype(np.float32))
     out = []
     for n in (8, 16):
+        fmt = f"t{n}"
         kv_dtype = {8: np.uint8, 16: np.uint16}[n]
         k = jnp.asarray(rng.integers(0, 1 << n, (B, Hkv, S, d)).astype(kv_dtype))
         v = jnp.asarray(rng.integers(0, 1 << n, (B, Hkv, S, d)).astype(kv_dtype))
@@ -197,15 +240,28 @@ def bench_attention(smoke: bool) -> list[dict]:
         k = jnp.where(k == nar, 0, k)
         v = jnp.where(v == nar, 0, v)
         for impl in ("bits", "lut"):
-            f = lambda q, k, v, n=n, impl=impl: takum_decode_attention(
-                q, k, v, n, block_s=bs, decode_impl=impl
+            f = lambda q, k, v, fmt=fmt, impl=impl: takum_decode_attention(
+                q, k, v, fmt, block_s=bs, decode_impl=impl
             )
             us = _time(f, q, k, v, reps=reps)
             out.append({
-                "op": "decode_attention", "n": n, "impl": impl,
+                "op": "decode_attention", "fmt": fmt, "n": n, "impl": impl,
                 "B": B, "H": H, "Hkv": Hkv, "S": S, "d": d,
                 "us": round(us, 1), "tokens_s": round(B / us * 1e6, 1),
             })
+    kv = jnp.asarray(rng.standard_normal((B, Hkv, S, d)).astype(np.float32))
+    for fmt in ("e4m3", "e5m2", "bf16"):
+        kb = kref.codec_encode_ref(kv, fmt)
+        f = lambda q, k, v, fmt=fmt: takum_decode_attention(
+            q, k, v, fmt, block_s=bs
+        )
+        us = _time(f, q, kb, kb, reps=reps)
+        out.append({
+            "op": "decode_attention", "fmt": fmt,
+            "n": wire_format(fmt).nbits, "impl": "default",
+            "B": B, "H": H, "Hkv": Hkv, "S": S, "d": d,
+            "us": round(us, 1), "tokens_s": round(B / us * 1e6, 1),
+        })
     return out
 
 
@@ -223,7 +279,7 @@ def bench_train_step(smoke: bool) -> list[dict]:
     B, Sq = (4, 64) if smoke else (8, 128)
     reps = 2 if smoke else 5
     out = []
-    for policy in ("bf16", "takum"):
+    for policy in ("bf16", "ofp8", "takum"):
         cfg = configs.get_smoke("llama3_8b").with_(quant=POLICIES[policy])
         mesh = jax.make_mesh((1, 1), ("data", "model"))
         pipe = SyntheticLM(cfg.vocab_size, Sq, B, seed=11)
@@ -250,22 +306,68 @@ def run(smoke: bool = False) -> dict:
     attention = bench_attention(smoke)
     train_step = bench_train_step(smoke)
 
-    def _melem(rows, n, impl, mode):
+    def _melem(rows, fmt, impl, mode):
         return next(
             r["melem_s"] for r in rows
-            if r["n"] == n and r["impl"] == impl and r.get("mode", mode) == mode
+            if r.get("fmt") == fmt and r["impl"] == impl
+            and r.get("mode", mode) == mode
         )
 
     def _speedups(mode):
         return {
             f"takum{n}": round(
-                _melem(decode, n, "lut", mode) / _melem(decode, n, "bits", mode), 2
+                _melem(decode, f"t{n}", "lut", mode)
+                / _melem(decode, f"t{n}", "bits", mode), 2
             )
             for n in (8, 16)
         }
 
+    # the format matrix condensed: op-dispatch decode Melem/s per format and
+    # impl, plus the takum-vs-zoo ratios on identical kernels (>1 = takum
+    # faster on this harness)
+    fmt_decode = {
+        fmt: {
+            impl: _melem(decode, fmt, impl, "op_dispatch")
+            for impl in ("bits", "lut")
+        }
+        for fmt in WIRE_MATRIX
+    }
+
+    # impl-matched rows only: the non-t8 format rows run their *default*
+    # impl (lut for the 8-bit formats), so the t8 side of each ratio must be
+    # its lut row too — otherwise the "identical kernels" claim is false
+    def _mm_gflops(fmt, impl):
+        return next(
+            r["gflop_s"] for r in matmul
+            if r["fmt"] == fmt and r["impl"] == impl
+        )
+
+    def _attn_toks(fmt, impl):
+        return next(
+            r["tokens_s"] for r in attention
+            if r["fmt"] == fmt and r["impl"] == impl
+        )
+
+    takum_vs_zoo = {
+        "decode_lut_t8_over_e4m3": round(
+            fmt_decode["t8"]["lut"] / fmt_decode["e4m3"]["lut"], 2
+        ),
+        "decode_bits_t8_over_e4m3": round(
+            fmt_decode["t8"]["bits"] / fmt_decode["e4m3"]["bits"], 2
+        ),
+        "decode_bits_t16_over_bf16": round(
+            fmt_decode["t16"]["bits"] / fmt_decode["bf16"]["bits"], 2
+        ),
+        "matmul_t8_over_e4m3": round(
+            _mm_gflops("t8", "lut") / _mm_gflops("e4m3", "default"), 2
+        ),
+        "attention_t8_over_e4m3": round(
+            _attn_toks("t8", "lut") / _attn_toks("e4m3", "default"), 2
+        ),
+    }
+
     report = {
-        "schema": "bench_kernels/v2",
+        "schema": "bench_kernels/v3",
         "backend": jax.default_backend(),
         "interpret_mode": jax.default_backend() == "cpu",
         "smoke": smoke,
@@ -278,6 +380,8 @@ def run(smoke: bool = False) -> dict:
         # count, the TPU-relevant quantity; "fused" = XLA-CPU-fused floor
         "decode_speedup_lut_vs_bits": _speedups("op_dispatch"),
         "decode_speedup_lut_vs_bits_fused": _speedups("fused"),
+        "format_matrix_decode_melem_s": fmt_decode,
+        "takum_vs_zoo": takum_vs_zoo,
         "hbm_model_bytes_1024x1024": hbm_model(1024, 1024),
     }
     return report
@@ -286,21 +390,21 @@ def run(smoke: bool = False) -> dict:
 def emit(report: dict, write_json: bool) -> None:
     os.makedirs(RESULTS, exist_ok=True)
     with open(os.path.join(RESULTS, "kernels.csv"), "w") as fh:
-        fh.write("name,n,us_per_call,derived\n")
+        fh.write("name,fmt,us_per_call,derived\n")
         for row in report["decode"] + report["encode"]:
             mode = row.get("mode", "fused")
             fh.write(
-                f"codec_{row['op']}_{mode}_{row['impl']},{row['n']},{row['us']},"
+                f"codec_{row['op']}_{mode}_{row['impl']},{row['fmt']},{row['us']},"
                 f"{row['melem_s']:.0f} Melem/s\n"
             )
         for row in report["matmul"]:
             fh.write(
                 f"dequant_matmul_{row['impl']}_{row['M']}x{row['K']}x{row['N']},"
-                f"{row['n']},{row['us']},{row['gflop_s']} GFLOP/s-cpu\n"
+                f"{row['fmt']},{row['us']},{row['gflop_s']} GFLOP/s-cpu\n"
             )
         for row in report["attention"]:
             fh.write(
-                f"decode_attention_{row['impl']}_S{row['S']},{row['n']},"
+                f"decode_attention_{row['impl']}_S{row['S']},{row['fmt']},"
                 f"{row['us']},{row['tokens_s']} tok/s-cpu\n"
             )
         for row in report["train_step"]:
@@ -322,17 +426,17 @@ def main() -> None:
     for row in report["decode"] + report["encode"]:
         mode = row.get("mode", "fused")
         print(
-            f"kernel_{row['op']}_{mode}_{row['impl']}_{row['n']},"
+            f"kernel_{row['op']}_{mode}_{row['impl']}_{row['fmt']},"
             f"{row['us']:.0f},{row['melem_s']:.0f} Melem/s"
         )
     for row in report["matmul"]:
         print(
-            f"kernel_dequant_matmul_{row['impl']}_{row['M']}x{row['K']}x{row['N']},"
+            f"kernel_dequant_matmul_{row['fmt']}_{row['impl']}_{row['M']}x{row['K']}x{row['N']},"
             f"{row['us']:.0f},{row['gflop_s']} GFLOP/s-cpu"
         )
     for row in report["attention"]:
         print(
-            f"kernel_decode_attention_{row['impl']}_{row['n']}_S{row['S']},"
+            f"kernel_decode_attention_{row['impl']}_{row['fmt']}_S{row['S']},"
             f"{row['us']:.0f},{row['tokens_s']} tok/s-cpu"
         )
     for row in report["train_step"]:
@@ -342,6 +446,11 @@ def main() -> None:
         )
     sp = report["decode_speedup_lut_vs_bits"]
     print(f"kernel_decode_speedup_lut_vs_bits,0,t8={sp['takum8']}x|t16={sp['takum16']}x")
+    zoo = report["takum_vs_zoo"]
+    print(
+        "kernel_takum_vs_zoo,0,"
+        + "|".join(f"{k}={v}x" for k, v in zoo.items())
+    )
     if write_json:
         print(f"kernel_bench_json,0,{os.path.relpath(bench_json_path(smoke), REPO_ROOT)}")
 

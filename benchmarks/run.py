@@ -53,6 +53,35 @@ def _fold_results(smoke: bool, fold_keys: set) -> None:
         fh.write("\n")
 
 
+def _check_format_dispatch(report: dict) -> None:
+    """Fail if a wire format registered in core is unreachable from the
+    kernels.ops dispatch layer or missing from the bench format matrix."""
+    import jax.numpy as jnp
+
+    from repro.core.formats import kernel_wire_names, wire_format
+    from repro.kernels import ops
+
+    registered = set(kernel_wire_names())
+    dispatchable = set(ops.supported_wire_formats())
+    unreachable = registered - dispatchable
+    assert not unreachable, (
+        f"formats registered in core.formats but unreachable from "
+        f"kernels.ops dispatch: {sorted(unreachable)}"
+    )
+    bench_fmts = {r["fmt"] for r in report["decode"]}
+    missing = registered - bench_fmts
+    assert not missing, (
+        f"registered formats missing from the bench decode matrix: {sorted(missing)}"
+    )
+    # probe the real dispatch path (kernel or ref, per backend) per format
+    for name in sorted(registered):
+        wf = wire_format(name)
+        out = ops.decode(jnp.zeros((8, 128), wf.storage), name)
+        assert out.shape == (8, 128) and float(jnp.max(jnp.abs(out))) == 0.0, name
+    print(f"bench_format_dispatch,0,{len(registered)} formats reachable "
+          f"({','.join(sorted(registered))})")
+
+
 def _validate_bench_json(smoke: bool, fold_keys: set) -> None:
     from benchmarks.kernel_bench import bench_json_path
 
@@ -60,17 +89,24 @@ def _validate_bench_json(smoke: bool, fold_keys: set) -> None:
         report = json.load(fh)
     required = {"schema", "decode", "matmul", "attention", "train_step",
                 "decode_speedup_lut_vs_bits", "hbm_model_bytes_1024x1024",
+                "format_matrix_decode_melem_s", "takum_vs_zoo",
                 } | fold_keys
     missing = required - report.keys()
     assert not missing, f"BENCH_kernels.json missing keys: {sorted(missing)}"
-    impls = {(r["n"], r["impl"]) for r in report["decode"]}
-    assert {(8, "bits"), (8, "lut"), (16, "bits"), (16, "lut")} <= impls, impls
+    impls = {(r["fmt"], r["impl"]) for r in report["decode"]}
+    assert {("t8", "bits"), ("t8", "lut"), ("t16", "bits"), ("t16", "lut"),
+            ("e4m3", "lut"), ("e5m2", "lut"), ("bf16", "bits")} <= impls, impls
     assert any(not r["aligned"] for r in report["matmul"]), "need non-aligned matmul shapes"
     if "collectives" in fold_keys:
         red = report["collectives"]["wire_reduction_vs_f32"]
         assert red["t8"] == 4.0 and red["t16"] == 2.0, red
+        assert red["e4m3"] == 4.0 and red["e5m2"] == 4.0 and red["bf16"] == 2.0, red
+        assert set(report["collectives"]["pipe_hop"]) >= {"t8", "e4m3"}, (
+            "collectives summary missing compressed pipeline-hop rows"
+        )
     assert any(r["op"] == "decode_attention" for r in report["attention"])
     assert any(r["op"] == "train_step" for r in report["train_step"])
+    _check_format_dispatch(report)
     print(f"bench_json_valid,0,{len(report['decode'])}+{len(report['matmul'])} rows "
           f"+ folds {sorted(fold_keys)}")
 

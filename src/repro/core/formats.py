@@ -1,8 +1,22 @@
-"""Registry of machine number formats for the paper's benchmarks (Figs. 1-2).
+"""Format registries: figure-benchmark formats and first-class wire formats.
 
-Each entry provides numpy float64 round-trip conversion (encode to the format,
-decode back) — the operation the paper's Figure 2 performs on every matrix —
-plus the format's dynamic-range endpoints for Figure 1.
+Two registries live here:
+
+* ``FORMATS`` — the paper's Figure 1/2 registry: numpy float64 round-trip
+  conversion (encode to the format, decode back) plus dynamic-range
+  endpoints, for every format the figures compare (IEEE, OFP8, posit,
+  takum linear/log at several widths).
+
+* ``WIRE_FORMATS`` — the *operational* registry: every 8/16/32-bit format
+  the kernels, QTensors and compressed collectives can actually move bits
+  in.  A :class:`WireFormat` carries the codec in jnp form (kernel-safe,
+  unjitted — usable inside Pallas bodies), the numpy float64 oracle, the
+  storage dtype, and the format's special-value semantics (takum NaR vs
+  OFP8 NaN/saturation vs IEEE Inf).  Every layer that used to hard-code
+  takum (kernels.ops, quant.policy, dist.collectives) dispatches on this
+  registry instead; :func:`wire_format` resolves names, aliases, bare
+  takum widths (8/16/32 — the historical kernel API) and WireFormat
+  instances to one canonical entry.
 """
 
 from __future__ import annotations
@@ -10,10 +24,16 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable
 
+import jax
+import jax.numpy as jnp
 import ml_dtypes
 import numpy as np
 
-from . import ofp8, posit_np, takum_np
+from . import ofp8, posit_np, takum, takum_np
+
+# ---------------------------------------------------------------------------
+# figure registry (numpy round-trips, Figures 1-2)
+# ---------------------------------------------------------------------------
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,7 +74,10 @@ def _ofp8_roundtrip(fmt):
     return rt
 
 
-def _f(dt):
+def _finfo_range(dt) -> tuple[float, float]:
+    """(smallest subnormal, max finite) — ``ml_dtypes.finfo`` covers both the
+    ml_dtypes scalar types and the plain numpy floats, so one helper serves
+    every IEEE-derived entry (the old registry duplicated this per branch)."""
     fi = ml_dtypes.finfo(dt)
     return float(fi.smallest_subnormal), float(fi.max)
 
@@ -67,14 +90,10 @@ def _registry():
         ("float32", np.float32, 32),
         ("float64", np.float64, 64),
     ]:
-        lo, hi = (
-            (float(np.finfo(dt).smallest_subnormal), float(np.finfo(dt).max))
-            if dt in (np.float16, np.float32, np.float64)
-            else _f(dt)
-        )
+        lo, hi = _finfo_range(dt)
         fmts.append(Format(name, bits, "ieee", _ieee_roundtrip(dt), lo, hi))
     for fmt in ("e4m3", "e5m2"):
-        lo, hi = _f(ofp8._ML_DTYPES[fmt])
+        lo, hi = _finfo_range(ofp8.ml_dtype(fmt))
         fmts.append(Format(f"ofp8_{fmt}", 8, "ofp8", _ofp8_roundtrip(fmt), lo, hi))
     for n in (8, 16, 32):
         fmts.append(
@@ -110,3 +129,211 @@ FORMATS = _registry()
 def dynamic_range_decades(fmt: Format) -> float:
     """log10(maxpos / minpos) — the Figure 1 quantity."""
     return float(np.log10(fmt.maxpos) - np.log10(fmt.minpos))
+
+
+# ---------------------------------------------------------------------------
+# wire-format registry (the operational codec interface)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class WireFormat:
+    """A first-class machine number format the stack can move bits in.
+
+    ``encode_jnp``/``decode_jnp`` are *unjitted* jnp functions with kernel
+    clamp semantics (pallas-traceable: pure jnp ops, no nested jit) mapping
+    float32 <-> packed bit patterns in :attr:`storage`; ``encode_np``/
+    ``decode_np`` are the float64 numpy oracles (``ml_dtypes`` for the IEEE
+    families, the exact takum oracle otherwise).  ``special`` names the
+    format's out-of-range/invalid semantics:
+
+      nar   — single NaR pattern (1 0...0); finite overflow *saturates*
+      nan   — no Inf; overflow rounds into the NaN pattern (OFP8 E4M3)
+      inf   — IEEE Inf/NaN; overflow rounds to +-Inf (E5M2, bf16, f32)
+    """
+
+    name: str
+    nbits: int
+    family: str  # takum | ofp8 | ieee
+    special: str  # nar | nan | inf
+    encode_jnp: Callable = dataclasses.field(repr=False, default=None)
+    decode_jnp: Callable = dataclasses.field(repr=False, default=None)
+    encode_np: Callable = dataclasses.field(repr=False, default=None)
+    decode_np: Callable = dataclasses.field(repr=False, default=None)
+
+    @property
+    def storage(self):
+        """Narrowest unsigned jnp container for the packed bit patterns."""
+        return {8: jnp.uint8, 16: jnp.uint16, 32: jnp.uint32}[
+            8 if self.nbits <= 8 else (16 if self.nbits <= 16 else 32)
+        ]
+
+    @property
+    def np_storage(self):
+        return {8: np.uint8, 16: np.uint16, 32: np.uint32}[
+            8 if self.nbits <= 8 else (16 if self.nbits <= 16 else 32)
+        ]
+
+    @property
+    def supports_lut_decode(self) -> bool:
+        """Can decode be a single gather?  2**nbits entries must fit VMEM."""
+        return self.nbits <= 16
+
+    @property
+    def supports_lut_encode(self) -> bool:
+        """Exponent-byte encode tables exist for 8-bit formats only."""
+        return self.nbits == 8
+
+    @property
+    def supports_sr(self) -> bool:
+        """Stochastic-rounding encode available (takum family only)."""
+        return self.family == "takum"
+
+    def __str__(self):  # pragma: no cover - repr convenience
+        return f"WireFormat({self.name})"
+
+
+def _takum_wire(n: int) -> WireFormat:
+    def enc(x, n=n):
+        return takum.takum_encode(x, n, mode="linear")
+
+    def dec(bits, n=n):
+        if n <= 28:
+            # kernel clamp semantics, bit-exact with the decode LUTs
+            return jax.lax.bitcast_convert_type(
+                takum.takum_decode_f32bits(bits, n), jnp.float32
+            )
+        return takum.takum_decode(bits, n)
+
+    return WireFormat(
+        name=f"t{n}",
+        nbits=n,
+        family="takum",
+        special="nar",
+        encode_jnp=enc,
+        decode_jnp=dec,
+        encode_np=lambda x, n=n: takum_np.encode(x, n, "linear"),
+        decode_np=lambda b, n=n: takum_np.decode(b, n, "linear"),
+    )
+
+
+def _ofp8_wire(fmt: str) -> WireFormat:
+    return WireFormat(
+        name=fmt,
+        nbits=8,
+        family="ofp8",
+        special="nan" if fmt == "e4m3" else "inf",
+        encode_jnp=lambda x, fmt=fmt: ofp8.encode_jnp(x, fmt),
+        decode_jnp=lambda b, fmt=fmt: ofp8.decode_jnp(b, fmt),
+        encode_np=lambda x, fmt=fmt: ofp8.encode_np(x, fmt),
+        decode_np=lambda b, fmt=fmt: ofp8.decode_np(b, fmt),
+    )
+
+
+def _bf16_wire() -> WireFormat:
+    def enc(x):
+        return jax.lax.bitcast_convert_type(
+            x.astype(jnp.bfloat16), jnp.uint16
+        )
+
+    def dec(bits):
+        return jax.lax.bitcast_convert_type(
+            bits.astype(jnp.uint32) << 16, jnp.float32
+        )
+
+    def enc_np(x):
+        with np.errstate(invalid="ignore"):  # NaN/Inf casts are well-defined
+            return np.asarray(x, np.float64).astype(ml_dtypes.bfloat16).view(np.uint16)
+
+    def dec_np(b):
+        with np.errstate(invalid="ignore"):
+            return np.asarray(b, np.uint16).view(ml_dtypes.bfloat16).astype(np.float64)
+
+    return WireFormat(
+        name="bf16",
+        nbits=16,
+        family="ieee",
+        special="inf",
+        encode_jnp=enc,
+        decode_jnp=dec,
+        encode_np=enc_np,
+        decode_np=dec_np,
+    )
+
+
+def _f32_wire() -> WireFormat:
+    return WireFormat(
+        name="f32",
+        nbits=32,
+        family="ieee",
+        special="inf",
+        encode_jnp=lambda x: jax.lax.bitcast_convert_type(
+            x.astype(jnp.float32), jnp.uint32
+        ),
+        decode_jnp=lambda b: jax.lax.bitcast_convert_type(
+            b.astype(jnp.uint32), jnp.float32
+        ),
+        encode_np=lambda x: np.asarray(x, np.float64)
+        .astype(np.float32)
+        .view(np.uint32),
+        decode_np=lambda b: np.asarray(b, np.uint32)
+        .view(np.float32)
+        .astype(np.float64),
+    )
+
+
+WIRE_FORMATS: dict[str, WireFormat] = {
+    wf.name: wf
+    for wf in [
+        _f32_wire(),
+        _bf16_wire(),
+        _takum_wire(8),
+        _takum_wire(16),
+        _takum_wire(32),
+        _ofp8_wire("e4m3"),
+        _ofp8_wire("e5m2"),
+    ]
+}
+
+#: accepted spellings -> canonical registry names.  Bare ints are the
+#: historical takum kernel API (``matmul(x, w, 8)``).
+WIRE_ALIASES = {
+    8: "t8",
+    16: "t16",
+    32: "t32",
+    "takum8": "t8",
+    "takum16": "t16",
+    "takum32": "t32",
+    "float32": "f32",
+    "bfloat16": "bf16",
+    "ofp8_e4m3": "e4m3",
+    "ofp8_e5m2": "e5m2",
+}
+
+
+def wire_format(spec) -> WireFormat:
+    """Resolve a WireFormat | canonical name | alias | takum width -> entry."""
+    if isinstance(spec, WireFormat):
+        return spec
+    key = WIRE_ALIASES.get(spec, spec)
+    try:
+        return WIRE_FORMATS[key]
+    except (KeyError, TypeError):
+        raise KeyError(
+            f"unknown wire format {spec!r}; registered: {sorted(WIRE_FORMATS)}"
+        ) from None
+
+
+def wire_names() -> tuple[str, ...]:
+    return tuple(WIRE_FORMATS)
+
+
+def kernel_wire_names() -> tuple[str, ...]:
+    """Formats the Pallas kernels must be able to dispatch on: every
+    registered narrow (<= 16-bit) wire format.  f32 is the compute dtype,
+    not a packed wire; t32 exceeds the tabulable range."""
+    return tuple(
+        name
+        for name, wf in WIRE_FORMATS.items()
+        if wf.nbits <= 16 and name != "f32"
+    )

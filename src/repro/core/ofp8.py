@@ -32,9 +32,17 @@ SPECS = {
 _ML_DTYPES = {"e4m3": ml_dtypes.float8_e4m3fn, "e5m2": ml_dtypes.float8_e5m2}
 
 
-@functools.partial(jax.jit, static_argnames=("fmt", "saturate"))
-def encode(x, fmt: str = "e4m3", saturate: bool = False):
-    """float32 -> 8-bit OFP8 patterns (uint8), RNE."""
+def ml_dtype(fmt: str):
+    """Public accessor: the ``ml_dtypes`` scalar type backing an OFP8 format."""
+    return _ML_DTYPES[fmt]
+
+
+def encode_jnp(x, fmt: str = "e4m3", saturate: bool = False):
+    """float32 -> 8-bit OFP8 patterns (uint8), RNE.
+
+    Unjitted body (kernel-safe: pure jnp ops, traceable inside pallas);
+    :func:`encode` is the jitted public wrapper.
+    """
     spec = SPECS[fmt]
     eb, mb, bias = spec["ebits"], spec["mbits"], spec["bias"]
     x = x.astype(jnp.float32)
@@ -88,9 +96,11 @@ def encode(x, fmt: str = "e4m3", saturate: bool = False):
     return out.astype(jnp.uint8)
 
 
-@functools.partial(jax.jit, static_argnames=("fmt",))
-def decode(bits, fmt: str = "e4m3"):
-    """8-bit OFP8 patterns -> float32."""
+encode = jax.jit(encode_jnp, static_argnames=("fmt", "saturate"))
+
+
+def decode_jnp(bits, fmt: str = "e4m3"):
+    """8-bit OFP8 patterns -> float32 (unjitted body, kernel-safe)."""
     spec = SPECS[fmt]
     eb, mb, bias = spec["ebits"], spec["mbits"], spec["bias"]
     from .takum import _pow2_f32  # exact 2**k in f32 (bit assembly)
@@ -114,14 +124,19 @@ def decode(bits, fmt: str = "e4m3"):
     return jnp.where(sign == 1, -val, val).astype(jnp.float32)
 
 
+decode = jax.jit(decode_jnp, static_argnames=("fmt",))
+
+
 # --- numpy (ml_dtypes) paths -------------------------------------------------
 
 
 def encode_np(x, fmt: str = "e4m3"):
     """float64 -> OFP8 bit patterns via ml_dtypes (RNE, overflow->NaN/Inf)."""
-    arr = np.asarray(x, dtype=np.float64).astype(_ML_DTYPES[fmt])
+    with np.errstate(invalid="ignore"):  # NaN/Inf casts are well-defined here
+        arr = np.asarray(x, dtype=np.float64).astype(_ML_DTYPES[fmt])
     return arr.view(np.uint8)
 
 
 def decode_np(bits, fmt: str = "e4m3"):
-    return np.asarray(bits, dtype=np.uint8).view(_ML_DTYPES[fmt]).astype(np.float64)
+    with np.errstate(invalid="ignore"):
+        return np.asarray(bits, dtype=np.uint8).view(_ML_DTYPES[fmt]).astype(np.float64)

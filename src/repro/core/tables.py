@@ -1,34 +1,47 @@
-"""Precomputed takum codec lookup tables (the tabulated shared decoder).
+"""Precomputed wire-codec lookup tables (the tabulated shared decoder).
 
 The paper's companion hardware-codec work (Hunhold 2024) observes that the
-common <=12-bit takum decode stage is small enough to tabulate outright.  This
-module precomputes the tables the Pallas kernels gather from:
+common <=12-bit takum decode stage is small enough to tabulate outright —
+and the same observation holds for *every* 8-bit format in the WireFormat
+registry (OFP8 E4M3/E5M2 included): decode is a 256-entry gather, encode is
+a 256-entry exponent-byte table pair.  This module precomputes the tables
+the Pallas kernels gather from, for any registered wire format:
 
-* **Decode tables** — exact float32 values (and raw f32 bit patterns) for all
-  ``2**n`` takum-n patterns, with the *kernel* clamp semantics of
-  :func:`repro.core.takum.takum_decode_f32bits` (c > 127 saturates to
-  max-finite, c < -126 flushes to zero, NaR -> canonical NaN).  Sizes:
-  1 KiB for takum8, 256 KiB for takum16 — both VMEM-resident on TPU.
+* **Decode tables** — exact float32 values (and raw f32 bit patterns) for
+  all ``2**n`` patterns of an n <= 16-bit wire format, with the *kernel*
+  clamp semantics of that format's ``decode_jnp`` (takum: c > 127 saturates
+  to max-finite, c < -126 flushes to zero, NaR -> canonical NaN; OFP8/bf16:
+  the format's own NaN/Inf patterns pass through).  Sizes: 1 KiB for any
+  8-bit format, 256 KiB for takum16/bf16 — both VMEM-resident on TPU.
 
-* **Encode tables (takum8)** — an exact 256-entry table pair indexed by the
-  f32 *exponent byte* that turns encode into two gathers plus a handful of
-  integer ops.  Within one binade the takum8 code is an affine+RNE function
-  of the f32 mantissa, so each binade needs only:
+* **Encode tables (8-bit formats)** — an exact 256-entry table pair indexed
+  by the f32 *exponent byte* that turns encode into two gathers plus a
+  handful of integer ops.  Within one binade the target code is an
+  affine+RNE function of the f32 mantissa, so each binade needs only:
 
   - ``base``  : the code assigned to the bottom of the binade (2**c),
   - either a mantissa *shift* (binades where the code keeps p >= 1 mantissa
     bits: ``mag = base + RNE(m23 >> (23 - p))``), or a mantissa *threshold*
     (binades whose codes carry no mantissa: ``mag = base + (m23 > thr)``).
 
-  Thresholds are the exact rounding boundaries: the value of the 9-bit takum
-  pattern ``2*m + 1`` (append-a-one midpoint property), computed in float64
-  via the :mod:`repro.core.takum_np` oracle, with ties resolved to the even
-  code.  This reproduces ``takum_encode``'s round-to-nearest-even on the bit
-  string bit-for-bit (verified exhaustively in ``tests/test_tables.py``).
+  For takum8 the thresholds are the exact rounding boundaries: the value of
+  the 9-bit takum pattern ``2*m + 1`` (append-a-one midpoint property),
+  computed in float64 via the :mod:`repro.core.takum_np` oracle, ties
+  resolved to the even code — bit-for-bit ``takum_encode``'s RNE on the bit
+  string.  For the sign-magnitude formats (E4M3/E5M2) the boundaries are
+  the exact value midpoints of consecutive magnitude codes (all dyadic,
+  exact in float64), which coincides with IEEE round-to-nearest-even
+  because code parity equals mantissa parity; overflow *rounds through* the
+  top finite code into the format's overflow pattern (NaN for E4M3, Inf
+  for E5M2 — the OCP "round as if unbounded, then replace" rule), which the
+  consecutive-code carry reproduces for free.  Verified exhaustively in
+  ``tests/test_tables.py`` / ``tests/test_formats.py``.
 
 Subnormal f32 inputs flush to zero (DAZ): XLA CPU and TPU both treat f32
 subnormals as zero, so the tables bake that semantic in explicitly rather
-than inheriting it from backend flags.  See DESIGN.md §3.
+than inheriting it from backend flags.  (All 8-bit wire formats' minpos is
+far above the f32 subnormal range, so DAZ is value-invisible for OFP8.)
+See DESIGN.md §3.
 """
 
 from __future__ import annotations
@@ -55,61 +68,80 @@ ENC8_THR_FLAG = 1 << 7
 ENC8_THR_NEVER = 1 << 23
 
 
-def table_nbytes(n: int) -> int:
+def _wire(fmt):
+    from .formats import wire_format
+
+    return wire_format(fmt)
+
+
+def table_nbytes(fmt) -> int:
     """Bytes of VMEM one decode table occupies (f32 entries)."""
-    return (1 << n) * 4
+    return (1 << _wire(fmt).nbits) * 4
 
 
 @functools.lru_cache(maxsize=None)
-def decode_table_bits(n: int) -> np.ndarray:
-    """uint32[2**n]: f32 bit patterns of every takum-n code (kernel semantics).
-
-    Built by running :func:`takum.takum_decode_f32bits` over ``arange(2**n)``
-    so the table is bit-identical to the branch-free decode by construction.
-    """
+def _decode_table_bits_by_name(name: str) -> np.ndarray:
     import jax
     import jax.numpy as jnp
 
-    from .takum import takum_decode_f32bits
+    from .formats import wire_format
 
+    wf = wire_format(name)
+    if not wf.supports_lut_decode:
+        raise ValueError(f"decode table for {name!r}: 2**{wf.nbits} entries untabulable")
     # first use may be inside a jit trace (kernels build their table operand
     # during tracing): force eager evaluation so the table is a real constant
     with jax.ensure_compile_time_eval():
-        pats = jnp.arange(1 << n, dtype=jnp.uint32)
-        out = np.asarray(takum_decode_f32bits(pats, n), dtype=np.uint32)
+        pats = jnp.arange(1 << wf.nbits, dtype=jnp.uint32)
+        if wf.family == "takum":
+            # built via takum_decode_f32bits so the table is bit-identical
+            # to the branch-free kernel decode by construction
+            from .takum import takum_decode_f32bits
+
+            out = np.asarray(takum_decode_f32bits(pats, wf.nbits), dtype=np.uint32)
+        else:
+            vals = wf.decode_jnp(pats)
+            out = np.asarray(
+                jax.lax.bitcast_convert_type(vals, jnp.uint32), dtype=np.uint32
+            )
     out.setflags(write=False)
     return out
+
+
+def decode_table_bits(fmt) -> np.ndarray:
+    """uint32[2**n]: f32 bit patterns of every code of ``fmt`` (kernel
+    semantics).  ``fmt`` is a WireFormat, a registered name, or a bare takum
+    width (the historical API: 8 -> t8, 16 -> t16)."""
+    return _decode_table_bits_by_name(_wire(fmt).name)
 
 
 @functools.lru_cache(maxsize=None)
-def decode_table_f32(n: int) -> np.ndarray:
-    """float32[2**n]: decoded value of every takum-n code (kernel semantics)."""
-    out = decode_table_bits(n).view(np.float32)
+def _decode_table_f32_by_name(name: str) -> np.ndarray:
+    out = _decode_table_bits_by_name(name).view(np.float32)
     out.setflags(write=False)
     return out
 
 
-def _code_of(x: float, boundaries: np.ndarray) -> int:
-    """Positive f64 value -> takum8 magnitude code under RNE-on-bit-string.
+def decode_table_f32(fmt) -> np.ndarray:
+    """float32[2**n]: decoded value of every code of ``fmt`` (kernel semantics)."""
+    return _decode_table_f32_by_name(_wire(fmt).name)
 
-    ``boundaries[m]`` is the exact rounding boundary between codes m and m+1
-    (the 9-bit takum value of pattern 2m+1); ties go to the even code.
-    """
-    m = 1
-    for j in range(1, 127):
+
+def _code_of(x: float, boundaries: np.ndarray, lo: int = 1) -> int:
+    """Positive f64 value -> magnitude code under RNE with ties to even.
+
+    ``boundaries[m]`` is the exact rounding boundary between codes m and
+    m+1; ties go to the even code.  ``lo`` is the smallest candidate code
+    (1 for takum — nonzero never rounds to 0 — and 0 for the sign-magnitude
+    formats, which do round small values to zero)."""
+    m = lo
+    for j in range(lo, len(boundaries)):
         if x > boundaries[j] or (x == boundaries[j] and j % 2 == 1):
             m = j + 1
     return m
 
 
-@functools.lru_cache(maxsize=None)
-def encode8_tables() -> tuple[np.ndarray, np.ndarray]:
-    """(meta uint32[256], thr int32[256]): exact f32 -> takum8 encode tables.
-
-    Indexed by the f32 exponent byte ``(bits >> 23) & 0xFF``.  Exponent 0
-    (zero and subnormals) maps to code 0 (DAZ); exponent 255 (inf/NaN) is
-    special-cased to NaR by the caller.
-    """
+def _encode8_tables_takum() -> tuple[np.ndarray, np.ndarray]:
     values = takum_np.decode(np.arange(128, dtype=np.uint64), 8)
     bounds = takum_np.decode(2 * np.arange(127, dtype=np.uint64) + 1, 9)
 
@@ -141,3 +173,112 @@ def encode8_tables() -> tuple[np.ndarray, np.ndarray]:
     meta.setflags(write=False)
     thr.setflags(write=False)
     return meta, thr
+
+
+def ofp8_overflow_code(name: str) -> int:
+    """First non-finite magnitude code: NaN (E4M3) or Inf (E5M2) — the code
+    the carry-through-overflow rounding lands on, and the encode-side cap."""
+    return {"e4m3": 0x7F, "e5m2": 0x7C}[name]
+
+
+def _encode8_tables_signmag(name: str) -> tuple[np.ndarray, np.ndarray]:
+    """Generic exponent-byte encode tables for a sign-magnitude 8-bit format.
+
+    Built from the format's own decode table: magnitude codes 0..K with
+    strictly increasing finite values, rounding boundaries at the exact
+    value midpoints (dyadic -> exact in float64), ties to the even code.
+    Binades wholly above the overflow threshold map straight to the
+    overflow code; the top in-range binade reaches it via mantissa carry.
+    """
+    vals = decode_table_f32(name)[:128].astype(np.float64)
+    finite = np.isfinite(vals)
+    K = int(np.max(np.nonzero(finite)[0]))
+    assert np.all(finite[: K + 1]) and np.all(np.diff(vals[: K + 1]) > 0), name
+    ovf_code = ofp8_overflow_code(name)
+    assert ovf_code == K + 1, (name, K, ovf_code)
+    bounds = (vals[:K] + vals[1 : K + 1]) / 2.0  # boundary between m, m+1
+    ovf_thr = vals[K] + (vals[K] - bounds[K - 1])  # v_K + ulp/2
+
+    meta = np.zeros(256, dtype=np.uint32)
+    thr = np.full(256, ENC8_THR_NEVER, dtype=np.int32)
+    meta[0] = ENC8_THR_FLAG | 1  # f32 zero/subnormals: far below minpos -> 0
+    for e in range(1, 255):
+        scale = 2.0 ** (e - 127)
+        if scale >= ovf_thr:
+            # whole binade overflows: NaN (E4M3) / Inf (E5M2), never rounds
+            meta[e] = np.uint32((ovf_code << 8) | ENC8_THR_FLAG | 1)
+            continue
+        base = _code_of(scale, bounds, lo=0)
+        # shift path: codes in [scale, 2*scale) uniformly spaced at
+        # scale / 2**p with the binade bottom exactly representable
+        in_binade = [
+            m for m in range(base, K + 1) if scale <= vals[m] < 2 * scale
+        ]
+        p = None
+        if in_binade and vals[base] == scale:
+            if len(in_binade) >= 2:
+                pf = np.log2(scale / (vals[base + 1] - vals[base]))
+                if pf == round(pf) and 0 <= round(pf) <= 22:
+                    p = int(round(pf))
+            elif base + 1 <= K and vals[base + 1] == 2 * scale:
+                p = 0
+        if p is not None:
+            step = scale / (1 << p)
+            uniform = all(
+                vals[base + j] == scale + j * step
+                for j in range(min(len(in_binade), 1 << p))
+            )
+            # the carry target (base + 2**p) must be the code of 2*scale,
+            # or lie beyond K (overflow -> the cap in the LUT encode tail)
+            carry_ok = (base + (1 << p) > K) or (
+                vals[base + (1 << p)] == 2 * scale
+            )
+            if not (uniform and carry_ok):
+                p = None
+        if p is not None:
+            meta[e] = np.uint32((base << 8) | (23 - p))
+            continue
+        # threshold path: at most one rounding boundary in [scale, 2*scale)
+        bs_in = [
+            m for m in range(K) if scale <= bounds[m] < 2 * scale
+        ]
+        assert len(bs_in) <= 1, (name, e, bs_in)
+        meta[e] = np.uint32((base << 8) | ENC8_THR_FLAG | 1)
+        if bs_in:
+            m = bs_in[0]
+            if base == m:  # boundary above base: threshold decides m vs m+1
+                mb = (bounds[m] / scale - 1.0) * (1 << 23)
+                if 0.0 <= mb < (1 << 23):
+                    imb = int(np.floor(mb))
+                    thr[e] = imb - 1 if (mb == imb and base % 2 == 1) else imb
+            else:
+                # tie at the binade bottom resolved *up* to base = m+1:
+                # every mantissa in the binade already rounds to base
+                assert base == m + 1, (name, e, base, m)
+    meta.setflags(write=False)
+    thr.setflags(write=False)
+    return meta, thr
+
+
+@functools.lru_cache(maxsize=None)
+def _encode8_tables_by_name(name: str) -> tuple[np.ndarray, np.ndarray]:
+    from .formats import wire_format
+
+    wf = wire_format(name)
+    if not wf.supports_lut_encode:
+        raise ValueError(f"encode tables are 8-bit only, got {name!r} ({wf.nbits}b)")
+    if wf.family == "takum":
+        return _encode8_tables_takum()
+    if wf.family == "ofp8":
+        return _encode8_tables_signmag(name)
+    raise ValueError(f"no encode-table builder for family {wf.family!r}")
+
+
+def encode8_tables(fmt="t8") -> tuple[np.ndarray, np.ndarray]:
+    """(meta uint32[256], thr int32[256]): exact f32 -> 8-bit encode tables.
+
+    Indexed by the f32 exponent byte ``(bits >> 23) & 0xFF``.  Exponent 0
+    (zero and subnormals) maps to code 0 (DAZ); exponent 255 (inf/NaN) is
+    special-cased to the format's NaR/NaN/Inf pattern by the caller.
+    """
+    return _encode8_tables_by_name(_wire(fmt).name)

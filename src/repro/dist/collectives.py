@@ -1,11 +1,15 @@
-"""Takum-compressed cross-pod collectives.
+"""Wire-format-compressed cross-pod collectives.
 
 The paper's uniform-format transport argument applied to the scarcest
 bandwidth in a multi-pod deployment: the inter-pod interconnect.  Gradients
-(and any other reduction payload) cross the wire as takum8/takum16 bit
-patterns instead of f32, cutting wire bytes 4x/2x, while every arithmetic
-accumulation stays in f32 (accumulate-wide / transport-narrow — the same
-split the VDPPT dequant kernels make for HBM).
+(and any other reduction payload) cross the wire as packed wire-format bit
+patterns instead of f32 — any registered <=16-bit
+:class:`~repro.core.formats.WireFormat`: takum8/16 (4x/2x fewer bytes),
+OFP8 E4M3/E5M2 (4x, the AVX10.2-zoo status quo), or bf16 (2x) — while
+every arithmetic accumulation stays in f32 (accumulate-wide /
+transport-narrow — the same split the VDPPT dequant kernels make for HBM).
+Running takum and OFP8 through the *same* ring is what makes the paper's
+wire-quality head-to-head apples-to-apples (``collectives_bench``).
 
 Algorithm (``compressed_psum``): a P-hop ring.  Each device encodes its
 local contribution once (RNE takum encode, DAZ semantics fixed in PR 1) and
@@ -33,25 +37,57 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.formats import wire_format
 from repro.core.tables import decode_table_f32
-from repro.core.takum import takum_encode
-from repro.quant.policy import FORMAT_BITS, is_takum, takum_width
+from repro.core.takum import takum_encode, takum_encode_sr
 
 IS_STUB = False
 
-# cache the *numpy* tables only: a jnp constant materialised inside a traced
-# region (e.g. a scan body) is a tracer and must never outlive its trace
-_TABLES: dict = {}
+
+def _lut_decode(bits, fmt):
+    """One gather from the format's exact f32 decode LUT.
+
+    ``decode_table_f32`` caches the *numpy* table (lru by canonical name);
+    the ``jnp.asarray`` wrap happens per call on purpose — a jnp constant
+    materialised inside a traced region (e.g. a scan body) is a tracer and
+    must never outlive its trace.
+    """
+    return jnp.take(
+        jnp.asarray(decode_table_f32(wire_format(fmt).name)),
+        bits.astype(jnp.int32), axis=0,
+    )
 
 
-def _decode_table(n: int):
-    if n not in _TABLES:
-        _TABLES[n] = decode_table_f32(n)
-    return jnp.asarray(_TABLES[n])
+def wire_codec(fmt, *, sr_key=None):
+    """(encode, decode) pair moving f32 payloads through wire format ``fmt``.
 
-
-def _lut_decode(bits, n: int):
-    return jnp.take(_decode_table(n), bits.astype(jnp.int32), axis=0)
+    ``encode`` maps f32 -> the wire payload (packed uint bits, or bf16 for
+    the bf16 wire); ``decode`` maps a payload back to f32 (a single gather
+    from the format's exact decode LUT for the packed formats).  ``sr_key``
+    switches the takum encode to stochastic rounding; the IEEE/OFP8
+    families only define RNE, so it is ignored there.  Shared by the
+    compressed psum ring, error feedback and the pipeline stage hops.
+    """
+    wf = wire_format(fmt)
+    if wf.name == "f32":
+        raise ValueError("f32 is the accumulate format, not a compressed wire")
+    if wf.name == "bf16":
+        return (
+            lambda v: v.astype(jnp.bfloat16),
+            lambda m: m.astype(jnp.float32),
+        )
+    if not wf.supports_lut_decode:
+        raise ValueError(
+            f"compressed wire format {wf.name!r} unsupported: the LUT decode "
+            "tabulates 2**n entries (use a <=16-bit format, or f32/bf16)"
+        )
+    if wf.family == "takum" and sr_key is not None:
+        encode = lambda v: takum_encode_sr(v, sr_key, wf.nbits)
+    elif wf.family == "takum":
+        encode = lambda v: takum_encode(v, wf.nbits)
+    else:
+        encode = lambda v: wf.encode_jnp(v).astype(wf.storage)
+    return encode, (lambda m: _lut_decode(m, wf.name))
 
 
 def axis_size(axis_name) -> int:
@@ -87,57 +123,43 @@ def _ring_reduce(wire, own_f32, axis_name, decode, N: int,
     return jnp.sum(stacked, axis=0)
 
 
-def compressed_psum(x, axis_name, fmt: str = "t8", *, exact_local: bool = True,
+def compressed_psum(x, axis_name, fmt="t8", *, exact_local: bool = True,
                     canonical_order: bool = True, sr_key=None):
-    """All-reduce-sum across ``axis_name`` with takum-compressed wire payloads.
+    """All-reduce-sum across ``axis_name`` with wire-compressed payloads.
 
     Must be called inside ``shard_map`` (the axis must be a manual mesh
-    axis).  ``fmt`` in {"f32", "bf16", "t8", "t16"}; "f32" falls through to
-    the native ``lax.psum`` (exact), "bf16" rides the same narrow-wire /
-    f32-accumulate ring as the takum formats (a plain bf16 psum would also
-    *sum* in bf16, charging the wire format for narrow-accumulation error
-    it didn't cause).  Wider takum wire formats are rejected: the LUT
-    decode tabulates 2**n entries, practical only for n <= 16.  ``sr_key``
-    switches the wire encode from RNE to stochastic rounding
+    axis).  ``fmt`` is any registered wire format (name, alias, WireFormat,
+    or bare takum width): "f32" falls through to the native ``lax.psum``
+    (exact); every <=16-bit format — t8/t16, OFP8 e4m3/e5m2, bf16 — rides
+    the same narrow-wire / f32-accumulate ring (a plain bf16 psum would
+    also *sum* in bf16, charging the wire format for narrow-accumulation
+    error it didn't cause).  Wider formats are rejected: the LUT decode
+    tabulates 2**n entries.  Overflow semantics follow the format: takum
+    saturates (finite stays finite), E5M2/bf16 round to ±Inf, E4M3 rounds
+    into NaN — part of what the wire-quality benches measure.  ``sr_key``
+    switches the takum wire encode from RNE to stochastic rounding
     (``QuantPolicy.stochastic_rounding`` for grad_comm); fold the ring
     member's index into the key so SR noise decorrelates across sources —
     but replicas of one source (e.g. data-axis copies in a fully-manual
-    region) must share a key, or their rings diverge bitwise.  Returns f32
-    of ``x``'s shape.  See :func:`_ring_reduce` for ``canonical_order``.
+    region) must share a key, or their rings diverge bitwise.  (The
+    IEEE/OFP8 families only define RNE; ``sr_key`` is ignored there.)
+    Returns f32 of ``x``'s shape.  See :func:`_ring_reduce` for
+    ``canonical_order``.
     """
     xf = x.astype(jnp.float32)
-    if fmt == "f32":
+    wf = wire_format(fmt)
+    if wf.name == "f32":
         return jax.lax.psum(xf, axis_name)
     N = axis_size(axis_name)
     if N == 1:
         return xf
-    if fmt == "bf16":
-        # narrow wire, wide accumulation — same contract as the takum ring
-        # (a plain psum on bf16 would also *accumulate* in bf16, charging
-        # the wire format for narrow-sum error it didn't cause)
-        wire = xf.astype(jnp.bfloat16)
-        decode = lambda m: m.astype(jnp.float32)
-        own = xf if exact_local else decode(wire)
-        return _ring_reduce(wire, own, axis_name, decode, N, canonical_order)
-    assert is_takum(fmt), fmt
-    n = takum_width(fmt)
-    if n > 16:
-        raise ValueError(
-            f"compressed wire format {fmt!r} unsupported: the LUT decode "
-            "tabulates 2**n entries (use t8/t16, or f32/bf16 for wide wires)"
-        )
-    if sr_key is not None:
-        from repro.core.takum import takum_encode_sr
-
-        bits = takum_encode_sr(xf, sr_key, n)
-    else:
-        bits = takum_encode(xf, n)
-    decode = lambda m: _lut_decode(m, n)
-    own = xf if exact_local else decode(bits)
-    return _ring_reduce(bits, own, axis_name, decode, N, canonical_order)
+    encode, decode = wire_codec(wf.name, sr_key=sr_key)
+    wire = encode(xf)
+    own = xf if exact_local else decode(wire)
+    return _ring_reduce(wire, own, axis_name, decode, N, canonical_order)
 
 
-def compressed_pmean(x, axis_name, fmt: str = "t8", *, exact_local: bool = False,
+def compressed_pmean(x, axis_name, fmt="t8", *, exact_local: bool = False,
                      canonical_order: bool = True, sr_key=None):
     """Mean-reduction variant (gradient sync).  Defaults to quantising the
     local term so ring members agree up to summation order."""
@@ -148,12 +170,11 @@ def compressed_pmean(x, axis_name, fmt: str = "t8", *, exact_local: bool = False
     ) / N
 
 
-def wire_bytes_per_element(fmt: str, pods: int) -> int:
+def wire_bytes_per_element(fmt, pods: int) -> int:
     """Bytes per payload element crossing the wire on a ``pods``-wide ring.
 
     A P-ring all-reduce sends P-1 full-payload messages per device; each
-    element travels as a ``fmt`` bit pattern.  f32 -> t16 halves this,
-    f32 -> t8 quarters it, independent of P.
+    element travels as a ``fmt`` bit pattern.  f32 -> t16/bf16 halves this,
+    f32 -> t8/e4m3/e5m2 quarters it, independent of P.
     """
-    assert fmt in FORMAT_BITS, fmt
-    return (pods - 1) * (FORMAT_BITS[fmt] // 8)
+    return (pods - 1) * (wire_format(fmt).nbits // 8)

@@ -18,6 +18,10 @@ uncompressed rate (beyond-paper lever; see DESIGN.md §7).
 The local term entering the ring is the *quantised* value ``q_t`` (not the
 exact f32): the residual bookkeeping must charge the worker exactly what the
 rest of the ring received.
+
+Any registered lossy wire format works (takum t8/t16, OFP8 e4m3/e5m2, bf16
+— the residual carry is format-agnostic), which is what lets the benches
+compare EF-takum8 against EF-E4M3 gradient rings on identical machinery.
 """
 
 from __future__ import annotations
@@ -25,10 +29,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.takum import takum_encode
-from repro.quant.policy import is_takum, takum_width
+from repro.core.formats import wire_format
 
-from .collectives import _lut_decode, _ring_reduce, axis_size
+from .collectives import _ring_reduce, axis_size, wire_codec
 
 IS_STUB = False
 
@@ -38,21 +41,21 @@ def ef_init(params):
     return jax.tree.map(lambda a: jnp.zeros(jnp.shape(a), jnp.float32), params)
 
 
-def ef_compressed_psum(g, err, axis_name, fmt: str = "t8"):
+def ef_compressed_psum(g, err, axis_name, fmt="t8"):
     """Compressed psum with error feedback; returns ``(reduced, new_err)``.
 
     ``g`` and ``err`` are matching pytrees (or single arrays); must be called
     inside ``shard_map`` over ``axis_name``.  ``reduced`` sums the
     residual-corrected, quantised contributions of every ring member in f32.
+    ``fmt`` is any registered lossy wire format (f32 would make the
+    residuals identically zero and is rejected by :func:`wire_codec`).
     """
-    assert is_takum(fmt), f"error feedback needs a takum wire format, got {fmt}"
-    n = takum_width(fmt)
+    encode, decode = wire_codec(wire_format(fmt).name)
     N = axis_size(axis_name)
 
     def one(gl, el):
         c = gl.astype(jnp.float32) + el
-        bits = takum_encode(c, n)
-        decode = lambda m: _lut_decode(m, n)
+        bits = encode(c)
         q = decode(bits)
         new_err = c - q
         reduced = q if N == 1 else _ring_reduce(bits, q, axis_name, decode, N)

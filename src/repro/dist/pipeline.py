@@ -5,14 +5,22 @@ stages whose parameters are sharded over a mesh axis (one stage per mesh
 slice).  Schedule: the classic M + P - 1 tick wavefront — at tick t, stage p
 processes microbatch t - p; activations advance one stage per tick via
 ``lax.ppermute`` (the only wire traffic: one microbatch of activations per
-tick per stage boundary).  Numerics are exactly the sequential composition
-(same ops, same order), which is what the dist test asserts.
+tick per stage boundary).  With the default f32 hops, numerics are exactly
+the sequential composition (same ops, same order), which is what the dist
+test asserts.
 
-Bubble fraction is (P-1)/(M+P-1); callers pick M >> P to amortise.  The
-ppermute payloads are f32 here — compressing them with the takum wire codec
-(as :mod:`repro.dist.collectives` does for psum) is a one-line extension
-measured in the collectives bench, left out of the default path because
-activations (unlike gradient sums) feed directly into the next matmul.
+``wire_fmt`` compresses the inter-stage hops through the wire codec (the
+``QuantPolicy.pipe_act`` surface): the sending stage encodes its output
+activations to the format's packed bits, ``ppermute`` moves the narrow
+payload, and the receiving stage decodes back to f32 — exactly the
+transport-narrow / compute-wide split ``compressed_psum`` makes for
+gradients, cutting the per-hop wire bytes 2-4x (t16/bf16 vs t8/e4m3).
+Unlike gradient sums, stage activations feed *directly* into the next
+matmul, so each hop injects one quantisation error per element per stage
+boundary; the quality/wire-bytes trade is measured in
+``benchmarks/collectives_bench`` and the default stays f32 (exact).
+
+Bubble fraction is (P-1)/(M+P-1); callers pick M >> P to amortise.
 """
 
 from __future__ import annotations
@@ -20,12 +28,15 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.formats import wire_format
+
 from ._compat import shard_map
 
 IS_STUB = False
 
 
-def pipeline_apply(stage_fn, stage_params, x, *, mesh, axis: str = "pipe"):
+def pipeline_apply(stage_fn, stage_params, x, *, mesh, axis: str = "pipe",
+                   wire_fmt=None):
     """Run microbatches through parameter-sharded pipeline stages.
 
     Args:
@@ -34,11 +45,28 @@ def pipeline_apply(stage_fn, stage_params, x, *, mesh, axis: str = "pipe"):
       x: ``[M, microbatch, ...]`` input microbatches.
       mesh: mesh containing ``axis``; its other axes are untouched.
       axis: mesh axis name the stages are laid out over.
+      wire_fmt: None/"f32" for exact f32 stage hops, or any registered
+        <=16-bit wire format ('t8', 't16', 'e4m3', 'e5m2', 'bf16') to
+        compress the inter-stage activation traffic (QuantPolicy.pipe_act).
 
     Returns the output of the final stage for every microbatch, replicated
     over ``axis`` — shape ``[M, microbatch, ...]``.
     """
     from jax.sharding import PartitionSpec as P
+
+    if wire_fmt is not None and wire_format(wire_fmt).name != "f32":
+        from repro.core.tables import decode_table_f32
+        from .collectives import wire_codec
+
+        name = wire_format(wire_fmt).name
+        if wire_format(name).supports_lut_decode and name != "bf16":
+            # build the decode LUT *here*, outside the shard_map body: an
+            # eager shard_map trace cannot host the table construction
+            # (ensure_compile_time_eval only escapes jit traces)
+            decode_table_f32(name)
+        hop_encode, hop_decode = wire_codec(name)
+    else:
+        hop_encode = hop_decode = None
 
     nstages = mesh.shape[axis]
     M = x.shape[0]
@@ -64,7 +92,13 @@ def pipeline_apply(stage_fn, stage_params, x, *, mesh, axis: str = "pipe"):
                 # the other stages vanish in the psum broadcast below
                 out_buf = out_buf.at[m].set(jnp.where(p == nstages - 1, out, 0.0))
             if nstages > 1:
-                recv = jax.lax.ppermute(out, axis, perm)
+                if hop_encode is None:
+                    recv = jax.lax.ppermute(out, axis, perm)
+                else:
+                    # narrow wire: encode once, move packed bits, decode on
+                    # arrival (the pipe_act compressed-hop surface)
+                    wire = jax.lax.ppermute(hop_encode(out), axis, perm)
+                    recv = hop_decode(wire).astype(x_all.dtype)
         return jax.lax.psum(out_buf, axis)
 
     fn = shard_map(

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.formats import wire_format
 from repro.models import transformer as T
 from repro.optim import adamw_init, adamw_update
 from repro.quant.policy import is_takum
@@ -219,16 +220,18 @@ def train_state_specs_nopod(cfg, mesh, *, master_dtype=jnp.float32):
 
 
 def quantize_params(cfg, params):
-    """Pack weights into ``cfg.quant.weights`` storage (takum -> QTensor with
-    per-tensor power-of-two scale; norm gains and other 1D leaves stay f32)."""
+    """Pack weights into ``cfg.quant.weights`` storage (takum/OFP8 -> QTensor
+    with per-tensor power-of-two scale; norm gains and other 1D leaves stay
+    f32; IEEE formats are a plain dtype cast)."""
     fmt = cfg.quant.weights
-    if not is_takum(fmt):
-        dt = jnp.bfloat16 if fmt == "bf16" else jnp.float32
+    wf = wire_format(fmt)
+    if wf.family == "ieee":
+        dt = jnp.bfloat16 if wf.name == "bf16" else jnp.float32
         return jax.tree.map(lambda a: a.astype(dt), params)
 
     def q(a):
         if a.ndim >= 2:
-            return quantize(a.astype(jnp.float32), fmt, scaled=True)
+            return quantize(a.astype(jnp.float32), wf.name, scaled=True)
         return a.astype(jnp.float32)
 
     return jax.tree.map(q, params)

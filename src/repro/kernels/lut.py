@@ -1,12 +1,17 @@
-"""Kernel-safe table-driven takum codec (gather-based decode/encode).
+"""Kernel-safe table-driven wire codecs (gather-based decode/encode).
 
-The alternative to the ~40-integer-op branch-free decode in
-:mod:`repro.kernels.common`: a single VMEM gather per element from the
-precomputed tables in :mod:`repro.core.tables`.  Every kernel hot path
-(matmul, dual-matmul, decode-attention, 2D codec) selects between the two
-via a ``decode_impl={"bits", "lut"}`` knob; LUT is the default for takum8
-(1 KiB table) and bit-twiddle for takum16 (the 256 KiB table occupies a
-meaningful VMEM fraction and may not pay off — the A/B switch is the point).
+The alternative to the branch-free bit-twiddle decoders: a single VMEM
+gather per element from the precomputed tables in :mod:`repro.core.tables`.
+The gather kernel is *format-agnostic* — the same `jnp.take` serves takum8,
+E4M3, E5M2 and bf16; only the table operand changes — which is what lets
+every kernel hot path (matmul, dual-matmul, decode-attention, 2D codec)
+accept any registered :class:`~repro.core.formats.WireFormat` through one
+``decode_impl={"bits", "lut"}`` knob.  "bits" dispatches to the format
+family's branch-free decoder (takum bit-assembly, OFP8 field unpack, bf16
+shift-bitcast); "lut" gathers.  Per-format defaults live in
+``DEFAULT_DECODE_IMPL`` (LUT for the 8-bit formats — 1 KiB tables — and
+bits for the 16-bit ones, whose 256 KiB tables occupy a meaningful VMEM
+fraction; the A/B switch is the point).
 
 Tables enter kernels as ordinary pallas_call operands with a whole-array
 BlockSpec, shaped ``(2**n // 128, 128)`` so they tile cleanly into VMEM
@@ -19,44 +24,105 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.tables import ENC8_THR_FLAG, decode_table_f32, encode8_tables
+from repro.core.formats import wire_format
+from repro.core.tables import (
+    ENC8_THR_FLAG,
+    decode_table_f32,
+    encode8_tables,
+    ofp8_overflow_code,
+)
+from .common import decode_takum_f32, encode_takum_from_f32
 
 _U = jnp.uint32
 
-#: per-width default decode implementation (the A/B knob's resting position)
-DEFAULT_DECODE_IMPL = {8: "lut", 16: "bits"}
+#: per-format default decode implementation (the A/B knob's resting position)
+DEFAULT_DECODE_IMPL = {
+    "t8": "lut",
+    "t16": "bits",
+    "e4m3": "lut",
+    "e5m2": "lut",
+    "bf16": "bits",
+}
 #: supported values for the decode_impl/encode_impl knobs
 DECODE_IMPLS = ("bits", "lut")
 
 
-def resolve_impl(impl: str | None, n: int) -> str:
-    """None -> per-width default; otherwise validate the explicit choice."""
+def resolve_impl(impl: str | None, fmt) -> str:
+    """None -> per-format default; otherwise validate the explicit choice."""
+    wf = wire_format(fmt)
     if impl is None:
-        return DEFAULT_DECODE_IMPL.get(n, "bits")
+        return DEFAULT_DECODE_IMPL.get(wf.name, "bits")
     if impl not in DECODE_IMPLS:
         raise ValueError(f"decode_impl must be one of {DECODE_IMPLS}, got {impl!r}")
+    if impl == "lut" and not wf.supports_lut_decode:
+        raise ValueError(f"decode_impl='lut': 2**{wf.nbits} entries untabulable")
     return impl
 
 
-def decode_table_operand(n: int):
-    """The takum-n decode table as a 2D f32 operand, lanes-major."""
-    return jnp.asarray(decode_table_f32(n)).reshape(-1, 128)
+def decode_bits_fn(fmt):
+    """The format's kernel-safe branch-free decode: uint bits -> float32.
+
+    Takum keeps the dedicated bit-assembly decoder in :mod:`.common`
+    (bit-identical to the LUT by construction); the other families use the
+    registry's unjitted ``decode_jnp`` (pure jnp ops, pallas-traceable).
+    """
+    wf = wire_format(fmt)
+    if wf.family == "takum":
+        return lambda bits: decode_takum_f32(bits, wf.nbits)
+    return wf.decode_jnp
 
 
-def encode8_table_operands():
-    """(meta, thr) takum8 encode tables as 2D operands (2, 128) each."""
-    meta, thr = encode8_tables()
+def encode_bits_fn(fmt):
+    """The format's kernel-safe branch-free encode: float32 -> uint bits."""
+    wf = wire_format(fmt)
+    if wf.family == "takum":
+        return lambda x: encode_takum_from_f32(x, wf.nbits)
+    return wf.encode_jnp
+
+
+def decode_table_operand(fmt):
+    """The format's decode table as a 2D f32 operand, lanes-major."""
+    return jnp.asarray(decode_table_f32(fmt)).reshape(-1, 128)
+
+
+def encode8_table_operands(fmt="t8"):
+    """(meta, thr) 8-bit encode tables as 2D operands (2, 128) each."""
+    meta, thr = encode8_tables(fmt)
     return jnp.asarray(meta).reshape(-1, 128), jnp.asarray(thr).reshape(-1, 128)
 
 
-def decode_takum_lut(tab, bits):
-    """Gather-based takum decode: uint patterns -> float32 values.
+def decode_wire_lut(tab, bits):
+    """Gather-based wire decode: uint patterns -> float32 values.
 
-    ``tab`` is the (possibly 2D-shaped) f32 decode table for the same n as
-    ``bits``; the mapping is a pure per-element gather — zero, NaR and
-    negative patterns are all just table rows.
+    ``tab`` is the (possibly 2D-shaped) f32 decode table for the same
+    format as ``bits``; the mapping is a pure per-element gather — zero,
+    NaR/NaN/Inf and negative patterns are all just table rows.
     """
     return jnp.take(tab.reshape(-1), bits.astype(jnp.int32), axis=0)
+
+
+#: back-compat alias (PR-1 name; the gather was never takum-specific)
+decode_takum_lut = decode_wire_lut
+
+
+def _round_shift_or_threshold(m23, mt, t):
+    """Shared encode tail: exponent-byte table entry -> magnitude code.
+
+    Threshold path: the binade holds at most one rounding boundary.  Shift
+    path: ``base + RNE(m23 >> s)`` with ties to the even *code*; the carry
+    across binades is exact because both takum codes and IEEE/OFP8
+    magnitude codes are consecutive integers in value order.
+    """
+    base = mt >> 8
+    s = mt & _U(0x7F)
+    mag_t = base + (m23 > t).astype(_U)
+    m23u = m23.astype(_U)
+    kept = m23u >> s
+    guard = (m23u >> (s - 1)) & 1
+    below = m23u & ((_U(1) << (s - 1)) - 1)
+    rnd = (guard == 1) & ((below != 0) | (((base + kept) & 1) == 1))
+    mag_s = base + kept + rnd.astype(_U)
+    return jnp.where((mt & _U(ENC8_THR_FLAG)) != 0, mag_t, mag_s)
 
 
 def encode_takum8_lut(x, meta, thr):
@@ -77,20 +143,44 @@ def encode_takum8_lut(x, meta, thr):
     mt = jnp.take(meta.reshape(-1), e, axis=0)
     t = jnp.take(thr.reshape(-1), e, axis=0)
 
-    base = mt >> 8
-    s = mt & _U(0x7F)
-    # threshold path: the binade holds at most one rounding boundary
-    mag_t = base + (m23 > t).astype(_U)
-    # shift path: base + RNE(m23 >> s), carry across binades is exact because
-    # takum codes are consecutive integers in value order
-    m23u = m23.astype(_U)
-    kept = m23u >> s
-    guard = (m23u >> (s - 1)) & 1
-    below = m23u & ((_U(1) << (s - 1)) - 1)
-    rnd = (guard == 1) & ((below != 0) | (((base + kept) & 1) == 1))
-    mag_s = base + kept + rnd.astype(_U)
-
-    mag = jnp.where((mt & _U(ENC8_THR_FLAG)) != 0, mag_t, mag_s)
+    mag = _round_shift_or_threshold(m23, mt, t)
     enc = jnp.where(neg == 1, (_U(0) - mag) & _U(0xFF), mag)
     enc = jnp.where(is_nar, _U(0x80), enc)
     return enc
+
+
+def encode_ofp8_lut(x, meta, thr, fmt: str):
+    """LUT-assisted exact f32 -> OFP8 encode (sign-magnitude tail).
+
+    Bit-identical to ``ofp8.encode(x, fmt)`` / ml_dtypes RNE: the shared
+    gather+round core, then the sign bit is OR'd on and rounding past the
+    top finite code is capped at the format's overflow pattern (E4M3 NaN /
+    E5M2 Inf — the round-as-if-unbounded-then-replace OCP rule).
+    """
+    ovf = _U(ofp8_overflow_code(fmt))
+    bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32), _U)
+    sign = bits >> 31
+    a = bits & _U(0x7FFFFFFF)
+    is_inf = a == _U(0x7F800000)
+    is_nan = a > _U(0x7F800000)
+
+    e = (a >> 23).astype(jnp.int32)
+    m23 = (a & _U(0x7FFFFF)).astype(jnp.int32)
+    mt = jnp.take(meta.reshape(-1), e, axis=0)
+    t = jnp.take(thr.reshape(-1), e, axis=0)
+
+    mag = _round_shift_or_threshold(m23, mt, t)
+    mag = jnp.minimum(mag, ovf)  # top-binade carry past the last finite code
+    mag = jnp.where(is_inf, ovf, mag)  # E4M3: Inf -> NaN (ovf *is* the NaN)
+    mag = jnp.where(is_nan, _U(0x7F), mag)
+    return ((sign << 7) | mag).astype(_U)
+
+
+def encode_wire8_lut(x, meta, thr, fmt):
+    """Dispatch the 8-bit LUT encode tail by format family."""
+    wf = wire_format(fmt)
+    if wf.family == "takum":
+        return encode_takum8_lut(x, meta, thr)
+    if wf.family == "ofp8":
+        return encode_ofp8_lut(x, meta, thr, wf.name)
+    raise ValueError(f"no LUT encode for family {wf.family!r}")

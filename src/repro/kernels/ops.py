@@ -1,20 +1,29 @@
 """Public jit'd entry points for the Pallas kernels (+ auto ref fallback).
 
+Every op takes a *wire-format handle*: a registered name ('t8', 't16',
+'e4m3', 'e5m2', 'bf16'), a :class:`~repro.core.formats.WireFormat`, or a
+bare takum width (8/16 — the historical API).  The handle is normalised to
+the canonical registry name before hitting the jitted kernels so aliases
+share one compilation cache entry.
+
 ``use_kernels(False)`` routes every op through the pure-jnp reference —
 useful inside large jitted programs (dry-run lowering) where interpret-mode
 pallas calls would be slow, and as an A/B switch in benchmarks.
 
 ``decode_impl``/``encode_impl`` select the in-kernel codec strategy
-("bits" = branch-free integer decode, "lut" = VMEM table gather; None picks
-the per-width default — LUT for takum8, bits for takum16).  The reference
-fallback ignores the knob (it defines the semantics both impls reproduce).
+("bits" = the family's branch-free decode, "lut" = VMEM table gather; None
+picks the per-format default — LUT for the 8-bit formats, bits for the
+16-bit ones).  The reference fallback ignores the knob (it defines the
+semantics both impls reproduce).
 """
 
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.core.formats import kernel_wire_names, wire_format
 from . import ref
+from .lut import resolve_impl
 from .takum_attention import takum_decode_attention
 from .takum_codec import takum_decode_2d, takum_encode_2d
 from .takum_matmul import takum_dual_matmul, takum_matmul
@@ -31,39 +40,65 @@ def kernels_enabled() -> bool:
     return _USE_KERNELS
 
 
-def encode(x, n: int, encode_impl=None):
-    """float32 [..., R, C] -> packed takum-n."""
+def supported_wire_formats() -> tuple[str, ...]:
+    """Registered wire formats this dispatch layer can route to kernels.
+
+    The CI bench step cross-checks this against the core registry: a format
+    registered in :mod:`repro.core.formats` but missing here (or failing
+    ``resolve_impl``) fails the perf-artifact validation.
+    """
+    out = []
+    for name in kernel_wire_names():
+        try:
+            resolve_impl(None, name)
+        except (KeyError, ValueError):  # pragma: no cover - registry drift
+            continue
+        out.append(name)
+    return tuple(out)
+
+
+def _name(fmt) -> str:
+    return wire_format(fmt).name
+
+
+def encode(x, fmt, encode_impl=None):
+    """float32 [..., R, C] -> packed wire-format bits."""
+    name = _name(fmt)
     if _USE_KERNELS and x.ndim == 2:
-        return takum_encode_2d(x, n, encode_impl=encode_impl)
-    return ref.codec_encode_ref(x, n)
+        return takum_encode_2d(x, name, encode_impl=encode_impl)
+    return ref.codec_encode_ref(x, name)
 
 
-def decode(bits, n: int, decode_impl=None):
+def decode(bits, fmt, decode_impl=None):
+    name = _name(fmt)
     if _USE_KERNELS and bits.ndim == 2:
-        return takum_decode_2d(bits, n, decode_impl=decode_impl)
-    return ref.codec_decode_ref(bits, n)
+        return takum_decode_2d(bits, name, decode_impl=decode_impl)
+    return ref.codec_decode_ref(bits, name)
 
 
-def matmul(x, w_bits, n: int, out_dtype=jnp.float32, decode_impl=None, **blocks):
+def matmul(x, w_bits, fmt, out_dtype=jnp.float32, decode_impl=None, **blocks):
     """x @ decode(w_bits): the dequant-in-kernel GEMM (VDPPT analogue)."""
+    name = _name(fmt)
     if _USE_KERNELS:
         return takum_matmul(
-            x, w_bits, n, out_dtype=out_dtype, decode_impl=decode_impl, **blocks
+            x, w_bits, name, out_dtype=out_dtype, decode_impl=decode_impl, **blocks
         )
-    return ref.takum_matmul_ref(x, w_bits, n, out_dtype=out_dtype)
+    return ref.takum_matmul_ref(x, w_bits, name, out_dtype=out_dtype)
 
 
-def dual_matmul(x_bits, w_bits, n: int, out_dtype=jnp.float32, decode_impl=None, **blocks):
+def dual_matmul(x_bits, w_bits, fmt, out_dtype=jnp.float32, decode_impl=None, **blocks):
+    name = _name(fmt)
     if _USE_KERNELS:
         return takum_dual_matmul(
-            x_bits, w_bits, n, out_dtype=out_dtype, decode_impl=decode_impl, **blocks
+            x_bits, w_bits, name, out_dtype=out_dtype, decode_impl=decode_impl, **blocks
         )
-    return ref.takum_dual_matmul_ref(x_bits, w_bits, n, out_dtype=out_dtype)
+    return ref.takum_dual_matmul_ref(x_bits, w_bits, name, out_dtype=out_dtype)
 
 
-def decode_attention(q, k_bits, v_bits, n: int, decode_impl=None, **kw):
+def decode_attention(q, k_bits, v_bits, fmt, decode_impl=None, **kw):
+    name = _name(fmt)
     if _USE_KERNELS:
         return takum_decode_attention(
-            q, k_bits, v_bits, n, decode_impl=decode_impl, **kw
+            q, k_bits, v_bits, name, decode_impl=decode_impl, **kw
         )
-    return ref.decode_attention_ref(q, k_bits, v_bits, n)
+    return ref.decode_attention_ref(q, k_bits, v_bits, name)

@@ -1,47 +1,56 @@
 """Pure-jnp oracles for every Pallas kernel in this package.
 
 These define the exact semantics the kernels must reproduce (tests assert
-allclose/equality across shape & dtype sweeps).
+allclose/equality across shape & dtype sweeps) — for every registered
+wire format, not just takum: ``fmt`` is a WireFormat, a registered name
+('t8', 'e4m3', 'bf16', ...), or a bare takum width (the historical API).
 """
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
+from repro.core.formats import wire_format
 from repro.core.takum import takum_decode_f32bits, takum_encode
-import jax
 
 
-def codec_encode_ref(x, n: int):
-    """float32 -> packed takum-n patterns (linear mode)."""
-    return takum_encode(x, n, mode="linear")
+def codec_encode_ref(x, fmt):
+    """float32 -> packed wire-format patterns (takum: linear mode, RNE)."""
+    wf = wire_format(fmt)
+    if wf.family == "takum":
+        return takum_encode(x, wf.nbits, mode="linear")
+    return wf.encode_jnp(x.astype(jnp.float32)).astype(wf.storage)
 
 
-def codec_decode_ref(bits, n: int):
-    """packed takum-n -> float32 with kernel clamp semantics."""
-    out = takum_decode_f32bits(bits, n)
-    return jax.lax.bitcast_convert_type(out, jnp.float32)
+def codec_decode_ref(bits, fmt):
+    """packed wire format -> float32 with kernel clamp semantics."""
+    wf = wire_format(fmt)
+    if wf.family == "takum":
+        out = takum_decode_f32bits(bits, wf.nbits)
+        return jax.lax.bitcast_convert_type(out, jnp.float32)
+    return wf.decode_jnp(bits)
 
 
-def takum_matmul_ref(x, w_bits, n: int, out_dtype=jnp.float32):
+def takum_matmul_ref(x, w_bits, fmt, out_dtype=jnp.float32):
     """x [M, K] (f32/bf16) @ decode(w_bits [K, N]) -> [M, N] f32 accumulate."""
-    w = codec_decode_ref(w_bits, n)
+    w = codec_decode_ref(w_bits, fmt)
     return jnp.dot(
         x.astype(jnp.float32), w, preferred_element_type=jnp.float32
     ).astype(out_dtype)
 
 
-def takum_dual_matmul_ref(x_bits, w_bits, n: int, out_dtype=jnp.float32):
+def takum_dual_matmul_ref(x_bits, w_bits, fmt, out_dtype=jnp.float32):
     """decode(x_bits [M, K]) @ decode(w_bits [K, N]) — the VDPPT analogue."""
-    x = codec_decode_ref(x_bits, n)
-    w = codec_decode_ref(w_bits, n)
+    x = codec_decode_ref(x_bits, fmt)
+    w = codec_decode_ref(w_bits, fmt)
     return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(out_dtype)
 
 
-def decode_attention_ref(q, k_bits, v_bits, n: int, *, scale=None):
-    """Single-token decode attention against a takum-quantised KV cache.
+def decode_attention_ref(q, k_bits, v_bits, fmt, *, scale=None):
+    """Single-token decode attention against a wire-format-quantised KV cache.
 
-    q: [B, H, d] f32;  k_bits/v_bits: [B, Hkv, S, d] packed takum-n.
+    q: [B, H, d] f32;  k_bits/v_bits: [B, Hkv, S, d] packed wire bits.
     GQA: H is a multiple of Hkv, query head h uses kv head h // (H // Hkv).
     Returns [B, H, d] f32.
     """
@@ -49,8 +58,8 @@ def decode_attention_ref(q, k_bits, v_bits, n: int, *, scale=None):
     Bk, Hkv, S, dk = k_bits.shape
     assert (B, d) == (Bk, dk) and H % Hkv == 0
     g = H // Hkv
-    k = codec_decode_ref(k_bits, n)  # [B, Hkv, S, d]
-    v = codec_decode_ref(v_bits, n)
+    k = codec_decode_ref(k_bits, fmt)  # [B, Hkv, S, d]
+    v = codec_decode_ref(v_bits, fmt)
     scale = (d ** -0.5) if scale is None else scale
     qg = q.reshape(B, Hkv, g, d)
     logits = jnp.einsum("bhgd,bhsd->bhgs", qg.astype(jnp.float32), k) * scale

@@ -1,11 +1,14 @@
-"""Pallas TPU kernel: flash-decode attention over a takum-quantised KV cache.
+"""Pallas TPU kernel: flash-decode attention over a wire-format KV cache.
 
 The memory-wall case the paper closes with ("particular emphasis on 8- and
 16-bit types"): single-token decode attention is HBM-bandwidth-bound on the
-KV cache read, so storing KV as takum-8/16 cuts the dominant roofline term
-2-4x vs bfloat16/f32.  K/V tiles are decoded in VMEM right before the MXU,
-either via the branch-free bit decode or the VMEM decode table
-(``decode_impl``, LUT default for takum8).
+KV cache read, so storing KV as a packed 8/16-bit wire format (takum-8/16,
+OFP8 E4M3/E5M2, bf16) cuts the dominant roofline term 2-4x vs f32.  K/V
+tiles are decoded in VMEM right before the MXU, either via the family's
+branch-free bit decode or the VMEM decode table (``decode_impl``, LUT
+default for the 8-bit formats) — the same gather kernel serves every
+registered format, which is what makes the takum-vs-OFP8 KV-cache
+head-to-head an apples-to-apples measurement.
 
 Layout: q [B, H, d] f32, kv cache [B, Hkv, S, d] packed takum-n (GQA: each kv
 head serves g = H/Hkv query heads).  Grid (B, Hkv, cdiv(S, bs)); online
@@ -34,20 +37,21 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .common import choose_block, decode_takum_f32, dim_mask, interpret_default, round_up
-from .lut import decode_table_operand, decode_takum_lut, resolve_impl
+from repro.core.formats import wire_format
+from .common import choose_block, dim_mask, interpret_default, round_up
+from .lut import decode_bits_fn, decode_table_operand, decode_wire_lut, resolve_impl
 
 _LANE = 128
 _SUBLANE = 8
 
 
-def _decode_attn_kernel(n, impl, S, bs, g, d, scale, *refs):
+def _decode_attn_kernel(fmt, impl, S, bs, g, d, scale, *refs):
     if impl == "lut":
         tab_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref = refs
-        decode = lambda bits: decode_takum_lut(tab_ref[...], bits)
+        decode = lambda bits: decode_wire_lut(tab_ref[...], bits)
     else:
         q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref = refs
-        decode = lambda bits: decode_takum_f32(bits, n)
+        decode = decode_bits_fn(fmt)
 
     s = pl.program_id(2)
 
@@ -104,19 +108,21 @@ def _decode_attn_kernel(n, impl, S, bs, g, d, scale, *refs):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("n", "block_s", "interpret", "decode_impl")
+    jax.jit, static_argnames=("fmt", "block_s", "interpret", "decode_impl")
 )
 def takum_decode_attention(
-    q, k_bits, v_bits, n: int, *, block_s=512, interpret=None, decode_impl=None
+    q, k_bits, v_bits, fmt, *, block_s=512, interpret=None, decode_impl=None
 ):
     """One-token decode attention; returns [B, H, d] f32.
 
-    q: [B, H, d] f32; k_bits/v_bits: [B, Hkv, S, d] packed takum-n.  S may be
-    any length (padded edge tile); d and g = H/Hkv may be arbitrary
-    (zero-padded to lane/sublane alignment outside the kernel).
+    q: [B, H, d] f32; k_bits/v_bits: [B, Hkv, S, d] packed wire-format bits
+    (``fmt``: registered name or bare takum width).  S may be any length
+    (padded edge tile); d and g = H/Hkv may be arbitrary (zero-padded to
+    lane/sublane alignment outside the kernel).
     """
     interpret = interpret_default() if interpret is None else interpret
-    impl = resolve_impl(decode_impl, n)
+    name = wire_format(fmt).name
+    impl = resolve_impl(decode_impl, name)
     B, H, d = q.shape
     _, Hkv, S, _ = k_bits.shape
     assert H % Hkv == 0
@@ -137,11 +143,11 @@ def takum_decode_attention(
     ]
     args = [qg, k_bits, v_bits]
     if impl == "lut":
-        tab = decode_table_operand(n)
+        tab = decode_table_operand(name)
         in_specs.insert(0, pl.BlockSpec(tab.shape, lambda b, h, s: (0, 0)))
         args.insert(0, tab)
     out = pl.pallas_call(
-        functools.partial(_decode_attn_kernel, n, impl, S, bs, g, d, scale),
+        functools.partial(_decode_attn_kernel, name, impl, S, bs, g, d, scale),
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, gp, dp), lambda b, h, s: (b, h, 0, 0)),

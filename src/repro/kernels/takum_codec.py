@@ -1,11 +1,14 @@
-"""Pallas TPU kernel: vectorised takum encode/decode (the VCVT instructions).
+"""Pallas TPU kernel: vectorised wire-format encode/decode (the VCVT family).
 
-Element-wise codec over 2D tiles.  BlockSpec keeps one (block_rows, block_cols)
-tile of input + output in VMEM; the body is either the branch-free integer bit
-manipulation (shared <=12-bit header decoder, paper §I) or the table-driven
-path (one VMEM gather per element for decode, two 256-entry gathers for the
-takum8 encode) feeding the VPU — selectable per call via
-``decode_impl``/``encode_impl``, LUT default for takum8.
+Element-wise codec over 2D tiles for any registered
+:class:`~repro.core.formats.WireFormat` (t8/t16 takum, OFP8 E4M3/E5M2,
+bf16).  BlockSpec keeps one (block_rows, block_cols) tile of input + output
+in VMEM; the body is either the family's branch-free bit manipulation
+(shared <=12-bit header decoder for takum, paper §I; field unpack for OFP8;
+shift-bitcast for bf16) or the table-driven path (one VMEM gather per
+element for decode, two 256-entry gathers for the 8-bit encodes) feeding
+the VPU — selectable per call via ``decode_impl``/``encode_impl``, LUT
+default for the 8-bit formats.
 
 Arbitrary (R, C) shapes are supported: the grid is cdiv-padded and edge tiles
 need no masking — the codec is element-wise, so garbage padding lanes only
@@ -20,33 +23,35 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.takum import storage_dtype
-from .common import choose_block, decode_takum_f32, encode_takum_from_f32, interpret_default
+from repro.core.formats import wire_format
+from .common import choose_block, interpret_default
 from .lut import (
+    decode_bits_fn,
     decode_table_operand,
-    decode_takum_lut,
+    decode_wire_lut,
     encode8_table_operands,
-    encode_takum8_lut,
+    encode_bits_fn,
+    encode_wire8_lut,
     resolve_impl,
 )
 
 
-def _decode_kernel(n, impl, *refs):
+def _decode_kernel(fmt, impl, *refs):
     if impl == "lut":
         tab_ref, b_ref, o_ref = refs
-        o_ref[...] = decode_takum_lut(tab_ref[...], b_ref[...])
+        o_ref[...] = decode_wire_lut(tab_ref[...], b_ref[...])
     else:
         b_ref, o_ref = refs
-        o_ref[...] = decode_takum_f32(b_ref[...], n)
+        o_ref[...] = decode_bits_fn(fmt)(b_ref[...])
 
 
-def _encode_kernel(n, impl, *refs):
+def _encode_kernel(fmt, impl, *refs):
     if impl == "lut":
         meta_ref, thr_ref, x_ref, o_ref = refs
-        enc = encode_takum8_lut(x_ref[...], meta_ref[...], thr_ref[...])
+        enc = encode_wire8_lut(x_ref[...], meta_ref[...], thr_ref[...], fmt)
     else:
         x_ref, o_ref = refs
-        enc = encode_takum_from_f32(x_ref[...], n)
+        enc = encode_bits_fn(fmt)(x_ref[...])
     o_ref[...] = enc.astype(o_ref.dtype)
 
 
@@ -58,24 +63,29 @@ def _blocks(R, C, block_rows, block_cols):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("n", "block_rows", "block_cols", "interpret", "decode_impl"),
+    static_argnames=("fmt", "block_rows", "block_cols", "interpret", "decode_impl"),
 )
 def takum_decode_2d(
-    bits, n: int, *, block_rows=256, block_cols=512, interpret=None, decode_impl=None
+    bits, fmt, *, block_rows=256, block_cols=512, interpret=None, decode_impl=None
 ):
-    """[R, C] packed takum-n -> [R, C] float32."""
+    """[R, C] packed wire format -> [R, C] float32.
+
+    ``fmt`` is a registered wire-format name or a bare takum width
+    (8 -> t8, 16 -> t16; the historical API).
+    """
     interpret = interpret_default() if interpret is None else interpret
-    impl = resolve_impl(decode_impl, n)
+    name = wire_format(fmt).name
+    impl = resolve_impl(decode_impl, name)
     R, C = bits.shape
     br, bc, grid = _blocks(R, C, block_rows, block_cols)
     in_specs = [pl.BlockSpec((br, bc), lambda i, j: (i, j))]
     args = [bits]
     if impl == "lut":
-        tab = decode_table_operand(n)
+        tab = decode_table_operand(name)
         in_specs.insert(0, pl.BlockSpec(tab.shape, lambda i, j: (0, 0)))
         args.insert(0, tab)
     return pl.pallas_call(
-        functools.partial(_decode_kernel, n, impl),
+        functools.partial(_decode_kernel, name, impl),
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
@@ -86,32 +96,35 @@ def takum_decode_2d(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("n", "block_rows", "block_cols", "interpret", "encode_impl"),
+    static_argnames=("fmt", "block_rows", "block_cols", "interpret", "encode_impl"),
 )
 def takum_encode_2d(
-    x, n: int, *, block_rows=256, block_cols=512, interpret=None, encode_impl=None
+    x, fmt, *, block_rows=256, block_cols=512, interpret=None, encode_impl=None
 ):
-    """[R, C] float32 -> [R, C] packed takum-n (uint8/uint16)."""
+    """[R, C] float32 -> [R, C] packed wire format (uint8/uint16)."""
     interpret = interpret_default() if interpret is None else interpret
-    impl = resolve_impl(encode_impl, n)
-    if impl == "lut" and n != 8:
-        raise ValueError("encode_impl='lut' is only tabulated for n=8")
+    wf = wire_format(fmt)
+    impl = resolve_impl(encode_impl, wf.name)
+    if impl == "lut" and not wf.supports_lut_encode:
+        raise ValueError(
+            f"encode_impl='lut' is only tabulated for 8-bit formats, got {wf.name}"
+        )
     R, C = x.shape
     br, bc, grid = _blocks(R, C, block_rows, block_cols)
     in_specs = [pl.BlockSpec((br, bc), lambda i, j: (i, j))]
     args = [x]
     if impl == "lut":
-        meta, thr = encode8_table_operands()
+        meta, thr = encode8_table_operands(wf.name)
         in_specs = [
             pl.BlockSpec(meta.shape, lambda i, j: (0, 0)),
             pl.BlockSpec(thr.shape, lambda i, j: (0, 0)),
         ] + in_specs
         args = [meta, thr] + args
     return pl.pallas_call(
-        functools.partial(_encode_kernel, n, impl),
+        functools.partial(_encode_kernel, wf.name, impl),
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((R, C), storage_dtype(n)),
+        out_shape=jax.ShapeDtypeStruct((R, C), wf.storage),
         interpret=interpret,
     )(*args)

@@ -1,10 +1,13 @@
-"""Pallas TPU kernel: dequantising takum matmul (the VDPPT* widening dots).
+"""Pallas TPU kernel: dequantising wire-format matmul (the VDPPT* widening dots).
 
-Computes ``x @ decode(w)`` with w stored as packed takum-8/16 in HBM and
-decoded tile-by-tile in VMEM before hitting the MXU.  This is the TPU-native
-adaptation of the paper's widening dot-product instructions (F08 ->
-VDPPT8PT16 etc.): takum is the storage/transport format, the MXU replaces
-the SIMD lane, accumulation is f32.
+Computes ``x @ decode(w)`` with w stored as packed wire-format bits (takum
+8/16, OFP8 E4M3/E5M2, or bf16) in HBM and decoded tile-by-tile in VMEM
+before hitting the MXU.  This is the TPU-native adaptation of the paper's
+widening dot-product instructions (F08 -> VDPPT8PT16 etc.): the wire format
+is the storage/transport format, the MXU replaces the SIMD lane,
+accumulation is f32 — and because the decode step is a format handle, the
+paper's head-to-head (uniform takum vs the IEEE-derived zoo) runs through
+*identical* kernel code.
 
 Grid: (cdiv(M,bm), cdiv(N,bn), cdiv(K,bk)), K innermost; one f32 [bm, bn]
 accumulator tile lives in VMEM scratch across the K steps.  Arbitrary
@@ -29,17 +32,18 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .common import choose_block, decode_takum_f32, dim_mask, interpret_default
-from .lut import decode_table_operand, decode_takum_lut, resolve_impl
+from repro.core.formats import wire_format
+from .common import choose_block, dim_mask, interpret_default
+from .lut import decode_bits_fn, decode_table_operand, decode_wire_lut, resolve_impl
 
 
-def _mm_kernel(n, impl, dual, K, bk, *refs):
+def _mm_kernel(fmt, impl, dual, K, bk, *refs):
     if impl == "lut":
         tab_ref, x_ref, w_ref, o_ref, acc_ref = refs
-        decode = lambda bits: decode_takum_lut(tab_ref[...], bits)
+        decode = lambda bits: decode_wire_lut(tab_ref[...], bits)
     else:
         x_ref, w_ref, o_ref, acc_ref = refs
-        decode = lambda bits: decode_takum_f32(bits, n)
+        decode = decode_bits_fn(fmt)
 
     @pl.when(pl.program_id(2) == 0)
     def _init():
@@ -69,7 +73,7 @@ def _mm_kernel(n, impl, dual, K, bk, *refs):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
-def _call(n, impl, dual, x, w, out_dtype, bm, bn, bk, interpret):
+def _call(fmt, impl, dual, x, w, out_dtype, bm, bn, bk, interpret):
     M, K = x.shape
     K2, N = w.shape
     assert K == K2, (x.shape, w.shape)
@@ -83,11 +87,11 @@ def _call(n, impl, dual, x, w, out_dtype, bm, bn, bk, interpret):
     ]
     args = [x, w]
     if impl == "lut":
-        tab = decode_table_operand(n)
+        tab = decode_table_operand(fmt)
         in_specs.insert(0, pl.BlockSpec(tab.shape, lambda i, j, k: (0, 0)))
         args.insert(0, tab)
     return pl.pallas_call(
-        functools.partial(_mm_kernel, n, impl, dual, K, bk),
+        functools.partial(_mm_kernel, fmt, impl, dual, K, bk),
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
@@ -99,36 +103,40 @@ def _call(n, impl, dual, x, w, out_dtype, bm, bn, bk, interpret):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("n", "out_dtype", "bm", "bn", "bk", "interpret", "decode_impl"),
+    static_argnames=("fmt", "out_dtype", "bm", "bn", "bk", "interpret", "decode_impl"),
 )
 def takum_matmul(
-    x, w_bits, n: int, *, out_dtype=jnp.float32, bm=256, bn=256, bk=512,
+    x, w_bits, fmt, *, out_dtype=jnp.float32, bm=256, bn=256, bk=512,
     interpret=None, decode_impl=None,
 ):
-    """x [M,K] f32/bf16 @ decode(w_bits [K,N] takum-n) -> [M,N] out_dtype."""
+    """x [M,K] f32/bf16 @ decode(w_bits [K,N] wire fmt) -> [M,N] out_dtype.
+
+    ``fmt`` is a registered wire-format name or a bare takum width.
+    """
     interpret = interpret_default() if interpret is None else interpret
-    impl = resolve_impl(decode_impl, n)
-    return _call(n, impl, False, x, w_bits, out_dtype, bm, bn, bk, interpret)
+    name = wire_format(fmt).name
+    impl = resolve_impl(decode_impl, name)
+    return _call(name, impl, False, x, w_bits, out_dtype, bm, bn, bk, interpret)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
-def takum_matmul_ad(x, w_bits, n: int):
+def takum_matmul_ad(x, w_bits, fmt):
     """Differentiable wrapper: forward = dequant-matmul kernel; backward
     propagates to x only (``dx = g @ decode(w).T``, itself a dequant-matmul on
     the bit-transposed weights).  Quantised weights receive no cotangent —
     they are storage; master parameters are updated by the optimizer and
     re-encoded (see repro.quant)."""
-    return takum_matmul(x, w_bits, n)
+    return takum_matmul(x, w_bits, fmt)
 
 
-def _takum_matmul_fwd(x, w_bits, n: int):
+def _takum_matmul_fwd(x, w_bits, fmt):
     # zero-size token carries x's dtype into the bwd rule (residuals must be arrays)
-    return takum_matmul(x, w_bits, n), (w_bits, jnp.zeros((0,), x.dtype))
+    return takum_matmul(x, w_bits, fmt), (w_bits, jnp.zeros((0,), x.dtype))
 
 
-def _takum_matmul_bwd(n: int, res, g):
+def _takum_matmul_bwd(fmt, res, g):
     w_bits, dtype_token = res
-    dx = takum_matmul(g, w_bits.T, n)
+    dx = takum_matmul(g, w_bits.T, fmt)
     return dx.astype(dtype_token.dtype), None
 
 
@@ -137,13 +145,14 @@ takum_matmul_ad.defvjp(_takum_matmul_fwd, _takum_matmul_bwd)
 
 @functools.partial(
     jax.jit,
-    static_argnames=("n", "out_dtype", "bm", "bn", "bk", "interpret", "decode_impl"),
+    static_argnames=("fmt", "out_dtype", "bm", "bn", "bk", "interpret", "decode_impl"),
 )
 def takum_dual_matmul(
-    x_bits, w_bits, n: int, *, out_dtype=jnp.float32, bm=256, bn=256, bk=512,
+    x_bits, w_bits, fmt, *, out_dtype=jnp.float32, bm=256, bn=256, bk=512,
     interpret=None, decode_impl=None,
 ):
-    """decode(x_bits) @ decode(w_bits), both packed takum-n (VDPPT analogue)."""
+    """decode(x_bits) @ decode(w_bits), both packed wire fmt (VDPPT analogue)."""
     interpret = interpret_default() if interpret is None else interpret
-    impl = resolve_impl(decode_impl, n)
-    return _call(n, impl, True, x_bits, w_bits, out_dtype, bm, bn, bk, interpret)
+    name = wire_format(fmt).name
+    impl = resolve_impl(decode_impl, name)
+    return _call(name, impl, True, x_bits, w_bits, out_dtype, bm, bn, bk, interpret)

@@ -40,7 +40,15 @@ from repro.dist import sharding as shd
 from repro.dist import step as dstep
 from repro.launch.mesh import make_production_mesh
 from repro.models import transformer as T
-from repro.quant.policy import POLICIES, is_takum
+from repro.core.formats import wire_format
+from repro.quant.policy import POLICIES
+
+
+def _packed_weights(cfg) -> bool:
+    """True when the serving weights are a packed wire format (takum/OFP8
+    QTensors) rather than a plain IEEE dtype cast."""
+    return wire_format(cfg.quant.weights).family != "ieee"
+
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "../../../benchmarks/results/dryrun")
 
@@ -135,7 +143,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool, policy: str = "taku
         )
         args = (ss, input_specs(cfg, shape))
     elif shape.kind == "prefill":
-        ps = (dstep.serve_param_shapes(cfg) if is_takum(cfg.quant.weights)
+        ps = (dstep.serve_param_shapes(cfg) if _packed_weights(cfg)
               else dstep.param_shapes(cfg, jnp.bfloat16))
         pspec = shd.param_specs(cfg, ps, mesh)
         bspec = shd.batch_specs(cfg, mesh, kind="prefill", batch=shape.batch)
@@ -149,7 +157,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool, policy: str = "taku
         )
         args = (ps, input_specs(cfg, shape))
     else:  # decode
-        ps = (dstep.serve_param_shapes(cfg) if is_takum(cfg.quant.weights)
+        ps = (dstep.serve_param_shapes(cfg) if _packed_weights(cfg)
               else dstep.param_shapes(cfg, jnp.bfloat16))
         pspec = shd.param_specs(cfg, ps, mesh)
         bspec = shd.batch_specs(cfg, mesh, kind="decode", batch=shape.batch)

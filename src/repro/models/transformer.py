@@ -27,6 +27,7 @@ from jax import lax
 
 from repro.core.takum import takum_decode, takum_encode
 from repro.dist.actx import constrain
+from repro.core.formats import wire_format
 from repro.quant.policy import is_takum, takum_width
 from .attention import flash_attention
 from .config import ModelConfig
@@ -333,9 +334,14 @@ class KVCache(NamedTuple):
 
 
 def _encode_cache(cfg, x):
+    """KV entries -> cache storage, per ``quant.kv_cache``: takum/OFP8 pack
+    to wire bits (e4m3 KV caches ride the registry), IEEE stays float."""
     fmt = cfg.quant.kv_cache
     if is_takum(fmt):
         return takum_encode(x.astype(jnp.float32), takum_width(fmt))
+    wf = wire_format(fmt)
+    if wf.family == "ofp8":
+        return wf.encode_jnp(x.astype(jnp.float32)).astype(wf.storage)
     return x.astype(jnp.bfloat16 if fmt == "bf16" else jnp.float32)
 
 
@@ -343,13 +349,17 @@ def _decode_cache(cfg, bits):
     fmt = cfg.quant.kv_cache
     if is_takum(fmt):
         return takum_decode(bits, takum_width(fmt))
+    wf = wire_format(fmt)
+    if wf.family == "ofp8":
+        return wf.decode_jnp(bits)
     return bits.astype(jnp.float32)
 
 
 def _cache_dtype(cfg):
     fmt = cfg.quant.kv_cache
-    if is_takum(fmt):
-        return {8: jnp.uint8, 16: jnp.uint16, 32: jnp.uint32}[takum_width(fmt)]
+    wf = wire_format(fmt)
+    if is_takum(fmt) or wf.family == "ofp8":
+        return wf.storage
     return jnp.bfloat16 if fmt == "bf16" else jnp.float32
 
 

@@ -7,30 +7,48 @@ each surface in the training/serving stack and assigns it a format:
     surface      AVX10.2-era choice      takum-uniform choice
     ---------    --------------------    --------------------
     weights      bf16                    t16 (or t8 + scale)
-    kv_cache     bf16 / fp8              t8
-    grad_comm    f32 / bf16              t16 / t8 (+ stochastic rounding)
+    kv_cache     bf16 / e4m3             t8
+    grad_comm    f32 / bf16 / e5m2       t16 / t8 (+ stochastic rounding)
     opt_state    f32                     t16 / t8 (+ stochastic rounding)
     checkpoint   f32                     t16
+    pipe_act     f32 / bf16              t16 / t8 (pipeline stage hops)
 
-Format names: 'f32', 'bf16', 't8', 't16', 't32' (t* = linear takum).
+Valid format names are exactly the :mod:`repro.core.formats` wire registry
+('f32', 'bf16', 't8'/'t16'/'t32' linear takum, OFP8 'e4m3'/'e5m2') — mixed
+IEEE/takum policies like ``kv_cache='e4m3', grad_comm='e5m2'`` are first
+class, which is what lets the status-quo side of the paper's head-to-head
+run end-to-end instead of as a numpy round-trip.  ``FORMAT_BITS`` is
+derived from that registry (no parallel hand-maintained dict);
+``is_takum``/``takum_width`` remain as thin registry queries for the many
+call sites that branch on the takum family.
+
 The *paper-faithful baseline* in EXPERIMENTS.md §Perf is the bf16 policy
-(status quo); the takum policies are the technique under study.
+(status quo); the OFP8 policy is the AVX10.2 FP8 zoo; the takum policies
+are the technique under study.
 """
 
 from __future__ import annotations
 
 import dataclasses
 
-FORMAT_BITS = {"f32": 32, "bf16": 16, "t8": 8, "t16": 16, "t32": 32}
+from repro.core.formats import WIRE_FORMATS, wire_format
+
+#: format name -> width in bits, derived from the core wire registry
+FORMAT_BITS = {name: wf.nbits for name, wf in WIRE_FORMATS.items()}
 
 
 def is_takum(fmt: str) -> bool:
-    return fmt.startswith("t") and fmt[1:].isdigit()
+    """True iff ``fmt`` resolves to a takum-family wire format."""
+    try:
+        return wire_format(fmt).family == "takum"
+    except KeyError:
+        return False
 
 
 def takum_width(fmt: str) -> int:
-    assert is_takum(fmt), fmt
-    return int(fmt[1:])
+    wf = wire_format(fmt)
+    assert wf.family == "takum", fmt
+    return wf.nbits
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,10 +61,14 @@ class QuantPolicy:
     activations: str = "bf16"  # compute dtype (IEEE: MXU native)
     scale_tensors: bool = True  # rescale to RMS~1 before takum encode (taper sweet spot)
     stochastic_rounding: bool = True  # for grad_comm / opt_state takum encodes
+    pipe_act: str = "f32"  # pipeline-parallel inter-stage activation hops
+
+    _SURFACES = ("weights", "kv_cache", "grad_comm", "opt_state", "checkpoint", "pipe_act")
 
     def __post_init__(self):
-        for f in (self.weights, self.kv_cache, self.grad_comm, self.opt_state, self.checkpoint):
-            assert f in FORMAT_BITS, f
+        for s in self._SURFACES:
+            f = getattr(self, s)
+            assert f in FORMAT_BITS, (s, f)
         assert self.activations in ("bf16", "f32")
 
     def bytes_per_el(self, surface: str) -> float:
@@ -55,14 +77,20 @@ class QuantPolicy:
 
 # Named policies used throughout benchmarks/EXPERIMENTS.md
 BF16_BASELINE = QuantPolicy()  # the AVX10.2-status-quo analogue
+OFP8_BASELINE = QuantPolicy(  # the AVX10.2 FP8 zoo the paper replaces
+    weights="bf16", kv_cache="e4m3", grad_comm="e5m2", pipe_act="e4m3"
+)
 TAKUM_UNIFORM = QuantPolicy(
-    weights="t16", kv_cache="t8", grad_comm="t16", opt_state="t16", checkpoint="t16"
+    weights="t16", kv_cache="t8", grad_comm="t16", opt_state="t16",
+    checkpoint="t16", pipe_act="t16",
 )
 TAKUM_AGGRESSIVE = QuantPolicy(
-    weights="t8", kv_cache="t8", grad_comm="t8", opt_state="t8", checkpoint="t16"
+    weights="t8", kv_cache="t8", grad_comm="t8", opt_state="t8",
+    checkpoint="t16", pipe_act="t8",
 )
 POLICIES = {
     "bf16": BF16_BASELINE,
+    "ofp8": OFP8_BASELINE,
     "takum": TAKUM_UNIFORM,
     "takum8": TAKUM_AGGRESSIVE,
 }

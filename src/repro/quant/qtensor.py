@@ -1,9 +1,16 @@
 """QTensor: a quantised-tensor pytree container (format + bits + scale).
 
+Works for every registered wire format: takum formats pack to uint bit
+patterns via the takum codec (with optional stochastic rounding), OFP8
+E4M3/E5M2 pack to uint8 via the OFP8 codec (RNE only — the OCP formats
+have no SR encoder; an ``sr_key`` is ignored), and the IEEE formats
+('f32'/'bf16') store the raw float array (MXU-native, no packing).
+
 Takum's tapered precision is densest near |x| ~ 1, so ``quantize`` optionally
 rescales by a per-tensor power-of-two RMS estimate before encoding (scale is
 exact to reapply).  ``scale=None`` is the paper-faithful pure-format
-conversion (what Figure 2 measures).
+conversion (what Figure 2 measures).  The same scaling helps OFP8's narrow
+dynamic range (E4M3 spans ~10 decades vs takum8's ~150).
 """
 
 from __future__ import annotations
@@ -14,15 +21,16 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.formats import wire_format
 from repro.core.takum import takum_decode, takum_encode, takum_encode_sr
-from .policy import FORMAT_BITS, is_takum, takum_width
+from .policy import FORMAT_BITS, takum_width
 
 
 @jax.tree_util.register_pytree_node_class
 @dataclass
 class QTensor:
     bits: Any  # packed patterns (uint8/16/32) or raw array for ieee formats
-    fmt: str  # 'f32' | 'bf16' | 't8' | 't16' | 't32'
+    fmt: str  # any registered wire format: 'f32' | 'bf16' | 't*' | 'e4m3' | 'e5m2'
     scale: Optional[Any] = None  # power-of-two scalar (f32) or None
 
     def tree_flatten(self):
@@ -53,27 +61,33 @@ def _pow2_scale(x):
 
 
 def quantize(x, fmt: str, *, scaled: bool = False, sr_key=None) -> QTensor:
-    """Quantise x into ``fmt``.  ``sr_key`` switches takum RNE -> stochastic."""
+    """Quantise x into ``fmt``.  ``sr_key`` switches takum RNE -> stochastic
+    (ignored for the IEEE/OFP8 families, which only define RNE)."""
+    wf = wire_format(fmt)
+    fmt = wf.name
     if fmt == "f32":
         return QTensor(x.astype(jnp.float32), fmt)
     if fmt == "bf16":
         return QTensor(x.astype(jnp.bfloat16), fmt)
-    assert is_takum(fmt), fmt
-    n = takum_width(fmt)
     scale = _pow2_scale(x) if scaled else None
     xs = (x / scale) if scale is not None else x
-    if sr_key is not None:
-        bits = takum_encode_sr(xs.astype(jnp.float32), sr_key, n)
+    xs = xs.astype(jnp.float32)
+    if wf.family == "takum":
+        n = takum_width(fmt)
+        bits = takum_encode_sr(xs, sr_key, n) if sr_key is not None else takum_encode(xs, n)
     else:
-        bits = takum_encode(xs.astype(jnp.float32), n)
+        bits = wf.encode_jnp(xs).astype(wf.storage)
     return QTensor(bits, fmt, scale)
 
 
 def dequantize(q: QTensor, dtype=jnp.float32):
     if q.fmt in ("f32", "bf16"):
         return q.bits.astype(dtype)
-    n = takum_width(q.fmt)
-    x = takum_decode(q.bits, n)
+    wf = wire_format(q.fmt)
+    if wf.family == "takum":
+        x = takum_decode(q.bits, takum_width(q.fmt))
+    else:
+        x = wf.decode_jnp(q.bits)
     if q.scale is not None:
         x = x * q.scale
     return x.astype(dtype)

@@ -14,8 +14,10 @@ Design notes for the 1000+-node deployment this models (DESIGN.md):
     corrupts LATEST;
   * the writer runs on a background thread (training continues; ``wait()``
     joins before the next save or at shutdown);
-  * takum compression (policy.checkpoint = 't16') halves checkpoint bytes via
-    the numpy codec — decode on restore is exact round-trip;
+  * wire compression (policy.checkpoint = 't16' / 'e4m3' / 'bf16' — any
+    registered narrow wire format) halves/quarters checkpoint bytes via the
+    format's numpy oracle codec — decode on restore is the exact
+    representable value (one quantisation on save, none after);
   * restore is sharding-agnostic: arrays come back as host numpy and are
     re-placed by the caller's current mesh (elastic restarts onto a
     different pod count).
@@ -33,6 +35,7 @@ import jax
 import numpy as np
 
 from repro.core import takum_np
+from repro.core.formats import wire_format
 
 
 class CheckpointManager:
@@ -56,14 +59,19 @@ class CheckpointManager:
             tmp = os.path.join(self.dir, f"step_{step:09d}.tmp")
             final = os.path.join(self.dir, f"step_{step:09d}")
             os.makedirs(tmp, exist_ok=True)
+            wf = wire_format(self.fmt)
+            compress = wf.name != "f32" and wf.nbits < 32
             arrays, meta_leaves = {}, []
             for i, a in enumerate(host):
-                if self.fmt.startswith("t") and np.issubdtype(a.dtype, np.floating):
-                    n = int(self.fmt[1:])
-                    bits = takum_np.encode(a.astype(np.float64), n)
-                    store = bits.astype({8: np.uint8, 16: np.uint16, 32: np.uint32}[n])
-                    arrays[f"a{i}"] = store
-                    meta_leaves.append({"takum": n, "dtype": str(a.dtype)})
+                if compress and np.issubdtype(a.dtype, np.floating):
+                    # pack through the format's float64 numpy oracle; the
+                    # "takum" meta key stays for old-checkpoint compat
+                    bits = wf.encode_np(a.astype(np.float64))
+                    arrays[f"a{i}"] = bits.astype(wf.np_storage)
+                    meta_leaves.append({
+                        "takum": wf.nbits if wf.family == "takum" else 0,
+                        "wire": wf.name, "dtype": str(a.dtype),
+                    })
                 else:
                     arrays[f"a{i}"] = a
                     meta_leaves.append({"takum": 0, "dtype": str(a.dtype)})
@@ -126,7 +134,14 @@ class CheckpointManager:
         leaves = []
         for i, info in enumerate(meta["leaves"]):
             a = z[f"a{i}"]
-            if info["takum"]:
+            if info.get("wire"):
+                wf = wire_format(info["wire"])
+                # takum_np parses shifted uint64 fields; the IEEE/OFP8
+                # oracles view the exact-width storage
+                raw = a.astype(np.uint64 if wf.family == "takum" else wf.np_storage)
+                a = wf.decode_np(raw).astype(info["dtype"])
+            elif info["takum"]:
+                # pre-registry checkpoints: bare takum width
                 a = takum_np.decode(a.astype(np.uint64), info["takum"]).astype(info["dtype"])
             leaves.append(a)
         _, treedef = jax.tree.flatten(example_tree)

@@ -87,8 +87,9 @@ mesh = jax.make_mesh((4, 2), ("pod", "x"))
 x = jnp.asarray(np.random.default_rng(0).standard_normal((4, 64, 32)).astype(np.float32))
 res = {}
 rms = float(np.sqrt(np.mean(np.asarray(x) ** 2)))
-for fmt in ("f32", "t16", "t8"):
-    f = jax.jit(jax.shard_map(lambda v: compressed_psum(v, "pod", fmt), mesh=mesh,
+for fmt in ("f32", "t16", "t8", "bf16", "e4m3", "e5m2"):
+    f = jax.jit(jax.shard_map(lambda v, fmt=fmt: compressed_psum(v, "pod", fmt),
+                mesh=mesh,
                 in_specs=P("pod", None, None), out_specs=P("pod", None, None)))
     got = np.asarray(f(x))
     exact = np.broadcast_to(np.asarray(x).sum(0, keepdims=True), x.shape)
@@ -100,6 +101,12 @@ print(json.dumps(res))
     assert out["f32"] < 1e-6
     assert out["t16"] < 2e-2  # P-1=3 terms quantised at <=2**-9 of magnitude
     assert out["t8"] < 1.0  # tapered 8-bit: ~2**-3 per term worst-case
+    assert out["bf16"] < 4e-2  # 8-bit mantissa wire
+    assert out["e4m3"] < 1.0  # 3-bit mantissa: ~2**-4 per term in-range
+    assert out["e5m2"] < 1.5  # 2-bit mantissa: the zoo's grad wire
+    # the paper's ordering on a unit-normal payload: t8 beats e5m2 at equal
+    # width, t16 beats bf16's error by construction (denser taper near 1)
+    assert out["t8"] < out["e5m2"]
 
 
 def test_multipod_compressed_train_step_compiles_and_runs():
@@ -175,3 +182,36 @@ err = float(np.abs(got - ref).max())
 print(json.dumps({"err": err}))
 """)
     assert out["err"] < 1e-5, out
+
+
+def test_pipeline_compressed_hops_quality():
+    """wire_fmt compresses the inter-stage activation hops (QuantPolicy's
+    pipe_act surface): outputs stay close to the exact-f32-hop pipeline,
+    tighter for 16-bit wires than 8-bit, and bit-exact for wire_fmt=None."""
+    out = _run(_PRE + """
+from repro.dist.pipeline import pipeline_apply
+mesh = jax.make_mesh((4, 2), ("pipe", "x"))
+P_st, M, mb, d = 4, 6, 3, 16
+rng = np.random.default_rng(0)
+ws = jnp.asarray(rng.standard_normal((P_st, d, d)).astype(np.float32)) * 0.5
+x = jnp.asarray(rng.standard_normal((M, mb, d)).astype(np.float32))
+
+def stage(w, h):
+    return jnp.tanh(h @ w)
+
+ref = np.asarray(pipeline_apply(stage, ws, x, mesh=mesh, axis="pipe"))
+rms = float(np.sqrt(np.mean(ref ** 2)))
+res = {}
+for fmt in ("t8", "t16", "e4m3", "bf16"):
+    got = np.asarray(pipeline_apply(stage, ws, x, mesh=mesh, axis="pipe",
+                                    wire_fmt=fmt))
+    res[fmt] = float(np.abs(got - ref).max() / rms)
+print(json.dumps(res))
+""")
+    # 3 compressed hops, tanh-bounded activations: one quantisation error
+    # per element per hop, amplified by at most ||w|| per stage
+    assert out["t8"] < 0.5, out
+    assert out["e4m3"] < 0.5, out
+    assert out["t16"] < 2e-2, out
+    assert out["bf16"] < 4e-2, out
+    assert out["t16"] < out["t8"]  # width ordering sanity

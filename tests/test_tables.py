@@ -148,3 +148,51 @@ def test_encode8_boundaries_are_9bit_takums():
     # each boundary lies strictly between its neighbouring code values
     for m in range(1, 126):
         assert values[m] < bounds[m] < values[m + 1]
+
+
+# ------------------------------------------- generic (sign-magnitude) tables
+
+
+@pytest.mark.parametrize("fmt", ("e4m3", "e5m2"))
+def test_encode8_tables_generic_structure(fmt):
+    """The generic OFP8 builder emits well-formed entries: bases within the
+    magnitude code space, shifts in [20, 23], thresholds in-mantissa-range,
+    and the above-range binades pinned to the overflow code."""
+    from repro.core.tables import ENC8_THR_FLAG, ENC8_THR_NEVER, ofp8_overflow_code
+
+    meta, thr = encode8_tables(fmt)
+    ovf = ofp8_overflow_code(fmt)
+    assert meta[0] == ENC8_THR_FLAG | 1  # zero/subnormal binade -> code 0
+    for e in range(1, 255):
+        base = int(meta[e]) >> 8
+        assert 0 <= base <= ovf, (fmt, e, base)
+        if int(meta[e]) & ENC8_THR_FLAG:
+            t = int(thr[e])
+            assert t == ENC8_THR_NEVER or 0 <= t < (1 << 23), (fmt, e, t)
+        else:
+            s = int(meta[e]) & 0x7F
+            assert 20 <= s <= 23, (fmt, e, s)  # OFP8 keeps p in [0, 3]
+    # every binade at/above the overflow threshold maps to the ovf code
+    top = {"e4m3": 448.0, "e5m2": 57344.0}[fmt]
+    e_above = int(np.log2(top)) + 2 + 127
+    for e in range(e_above, 255):
+        assert (int(meta[e]) >> 8) == ovf, (fmt, e)
+
+
+@pytest.mark.parametrize("fmt", ("t8", "e4m3", "e5m2"))
+def test_encode8_lut_projection_any_format(fmt):
+    """encode(decode(m)) == m wherever decode is injective, for every
+    tabulated 8-bit format (the takum test generalised)."""
+    from repro.kernels.lut import encode_wire8_lut
+
+    tab = decode_table_f32(fmt)
+    meta, thr = encode8_table_operands(fmt)
+    proj = np.asarray(
+        encode_wire8_lut(jnp.asarray(tab), meta, thr, fmt)
+    ).astype(np.uint8)
+    maxfin = np.float32(3.4028235e38)
+    for m in range(256):
+        v = tab[m]
+        if not np.isfinite(v) or v == 0.0 or abs(v) >= maxfin:
+            continue  # NaR/NaN/Inf, flushed-to-zero tail, or saturated tail
+        assert proj[m] == m, (fmt, m, v, proj[m])
