@@ -1,0 +1,145 @@
+"""Perf-trajectory regression gate: diff a fresh kernel-bench artifact
+against the committed ``BENCH_kernels.json`` baseline.
+
+    PYTHONPATH=src python -m benchmarks.compare \
+        [--baseline BENCH_kernels.json] [--candidate BENCH_kernels.json] \
+        [--threshold 0.2]
+
+Two checks, by artifact kind:
+
+* **Coverage** (always): every benchmark row *identity* present in the
+  baseline — (section, op, fmt, impl/mode/path/policy) — must still exist in
+  the candidate.  A refactor that silently drops a format or an impl from
+  the matrix fails here even in CI's smoke run.
+
+* **Throughput** (full-size artifacts only): for every identity matched
+  between two **non-smoke** reports, the candidate's throughput metric
+  (Melem/s, GFLOP/s, tokens/s) must be within ``threshold`` (default 20%)
+  of the baseline.  Smoke artifacts are exempt on purpose: CI machines and
+  smoke sizes are not comparable to the committed full-size baseline, so a
+  wall-clock gate there would only produce flakes.  The full-vs-full gate
+  runs in CI when a PR changes the committed ``BENCH_kernels.json``: the
+  *pre-PR* baseline is taken from ``origin/main`` (``--baseline``) — the
+  working-tree default of baseline == candidate is only the degenerate
+  self-check.
+
+Exit status 1 on any missing identity or regression.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: benchmark sections and the throughput metric each row carries
+SECTIONS = {
+    "decode": "melem_s",
+    "encode": "melem_s",
+    "encode_fused": "melem_s",
+    "matmul": "gflop_s",
+    "attention": "tokens_s",
+    "train_step": "tokens_s",
+}
+
+#: fields that identify *what* was measured (sizes excluded: smoke shrinks
+#: shapes/elems, and the coverage check must match across artifact sizes)
+IDENTITY_FIELDS = ("op", "fmt", "impl", "mode", "path", "policy", "arch", "aligned")
+
+
+def _identity(section: str, row: dict) -> tuple:
+    return (section,) + tuple(
+        (f, row[f]) for f in IDENTITY_FIELDS if f in row
+    )
+
+
+def _rows(report: dict):
+    """Yield (identity, metric_value) for every known benchmark row."""
+    for section, metric in SECTIONS.items():
+        for row in report.get(section, []):
+            yield _identity(section, row), float(row[metric])
+
+
+def _fmt_id(ident: tuple) -> str:
+    return ident[0] + "[" + ",".join(f"{k}={v}" for k, v in ident[1:]) + "]"
+
+
+def compare(baseline: dict, candidate: dict, threshold: float) -> list[str]:
+    """Returns the list of failure messages (empty = pass)."""
+    if baseline.get("schema") != candidate.get("schema"):
+        # a deliberate schema bump restructures the row identities (e.g.
+        # v3 -> v4 added encode modes), so neither coverage nor throughput
+        # can be judged across it: the bump — visible in review — resets
+        # the trajectory and the next same-schema PR re-arms the gate
+        print(
+            f"bench_compare_schema_reset,0,{baseline.get('schema')} -> "
+            f"{candidate.get('schema')}: gate skipped"
+        )
+        return []
+    base, cand = {}, {}
+    for ident, val in _rows(baseline):
+        base.setdefault(ident, []).append(val)
+    for ident, val in _rows(candidate):
+        cand.setdefault(ident, []).append(val)
+
+    failures = []
+    for ident in base:
+        if ident not in cand:
+            failures.append(f"missing from candidate: {_fmt_id(ident)}")
+    if baseline.get("smoke") or candidate.get("smoke"):
+        # wall-clock comparison is only meaningful full-size vs full-size
+        return failures
+
+    worst = None
+    for ident, bvals in base.items():
+        cvals = cand.get(ident)
+        if not cvals:
+            continue
+        # identities can cover several sizes (e.g. the matmul shape sweep);
+        # compare the per-identity aggregate rather than guessing row order
+        ratio = (sum(cvals) / len(cvals)) / (sum(bvals) / len(bvals))
+        if worst is None or ratio < worst[0]:
+            worst = (ratio, ident)
+        if ratio < 1.0 - threshold:
+            failures.append(
+                f"regression {_fmt_id(ident)}: {ratio:.2f}x of baseline "
+                f"({sum(bvals)/len(bvals):.1f} -> {sum(cvals)/len(cvals):.1f})"
+            )
+    if worst is not None:
+        print(f"bench_compare_worst_ratio,0,{worst[0]:.2f}x {_fmt_id(worst[1])}")
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--baseline", default=os.path.join(REPO_ROOT, "BENCH_kernels.json")
+    )
+    ap.add_argument(
+        "--candidate", default=os.path.join(REPO_ROOT, "BENCH_kernels.json")
+    )
+    ap.add_argument("--threshold", type=float, default=0.2)
+    args = ap.parse_args()
+
+    with open(args.baseline) as fh:
+        baseline = json.load(fh)
+    with open(args.candidate) as fh:
+        candidate = json.load(fh)
+
+    failures = compare(baseline, candidate, args.threshold)
+    mode = "coverage-only (smoke)" if (
+        baseline.get("smoke") or candidate.get("smoke")
+    ) else f"coverage + throughput (>{args.threshold:.0%} fails)"
+    if failures:
+        for f in failures:
+            print(f"bench_compare,1,{f}")
+        sys.exit(1)
+    n = sum(1 for _ in _rows(baseline))
+    print(f"bench_compare,0,OK: {n} baseline rows covered [{mode}]")
+
+
+if __name__ == "__main__":
+    main()

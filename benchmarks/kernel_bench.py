@@ -36,11 +36,12 @@ from repro.kernels.lut import (
     decode_bits_fn,
     decode_table_operand,
     decode_wire_lut,
-    encode8_table_operands,
     encode_bits_fn,
-    encode_wire8_lut,
+    encode_table_operands,
+    encode_wire_lut,
 )
 from repro.kernels.takum_attention import takum_decode_attention
+from repro.kernels.takum_codec import takum_encode_2d
 from repro.kernels.takum_matmul import takum_matmul
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -81,6 +82,17 @@ def _time(f, *args, reps=5, warmup=1):
         jax.block_until_ready(f(*args))
         ts.append((time.perf_counter() - t0) * 1e6)
     return statistics.median(ts)
+
+
+def _best_of_alternating(fns: dict, args: tuple, *, passes: int, reps: int) -> dict:
+    """name -> best median microseconds, with the passes *alternated* across
+    candidates: one sustained container-noise window cannot cover a single
+    candidate's whole measurement and flip an A/B comparison."""
+    acc = {k: [] for k in fns}
+    for _ in range(passes):
+        for k, f in fns.items():
+            acc[k].append(_time(f, *args, reps=reps))
+    return {k: min(v) for k, v in acc.items()}
 
 
 def hbm_model(rows: int, cols: int) -> dict:
@@ -145,29 +157,88 @@ def bench_decode(smoke: bool) -> list[dict]:
 
 
 def bench_encode(smoke: bool) -> list[dict]:
-    """Element-wise encode throughput across the format matrix: the family's
-    bit-twiddle everywhere, plus the exponent-byte LUT for 8-bit formats."""
-    elems = (1 << 20) if smoke else (1 << 22)
-    reps = 3 if smoke else 10
+    """Element-wise encode throughput across the format matrix, both impls,
+    two modes (mirroring ``bench_decode``): the family's bit-twiddle
+    everywhere, plus the table path where tabulated (the 8-bit
+    exponent-byte pairs and the two-level takum16 scheme).
+
+    ``op_dispatch`` is the headline here too — the takum bit-twiddle encode
+    is the heaviest codec body in the stack (~40 ops incl. the popcount
+    regime scan), so the 2-gather table path wins by instruction count;
+    ``fused`` records the XLA-CPU floor, where LLVM vectorises the bit
+    chain and the impls land much closer (best-of-2 medians: the margin is
+    smaller than container noise spikes).
+    """
     rng = np.random.default_rng(1)
-    x = jnp.asarray((rng.standard_normal(elems) * 2.0).astype(np.float32))
     out = []
     for fmt in WIRE_MATRIX:
         wf = wire_format(fmt)
-        by_impl = {"bits": jax.jit(encode_bits_fn(fmt))}
+        raw = {"bits": encode_bits_fn(fmt)}
         if wf.supports_lut_encode:
-            meta, thr = encode8_table_operands(fmt)
-            by_impl["lut"] = jax.jit(
-                lambda v, meta=meta, thr=thr, fmt=fmt: encode_wire8_lut(
-                    v, meta, thr, fmt
-                )
+            tabs = encode_table_operands(fmt)
+            raw["lut"] = lambda v, tabs=tabs, fmt=fmt: encode_wire_lut(v, tabs, fmt)
+        modes = {
+            "op_dispatch": {
+                "elems": 1 << 18 if smoke else 1 << 20,
+                "reps": 3 if smoke else 5,
+                "passes": 1,
+                "impls": raw,
+            },
+            "fused": {
+                "elems": 1 << 20 if smoke else 1 << 22,
+                "reps": 5 if smoke else 10,
+                "passes": 2,
+                "impls": {k: jax.jit(f) for k, f in raw.items()},
+            },
+        }
+        for mode, cfg in modes.items():
+            elems = cfg["elems"]
+            x = jnp.asarray((rng.standard_normal(elems) * 2.0).astype(np.float32))
+            best = _best_of_alternating(
+                cfg["impls"], (x,), passes=cfg["passes"], reps=cfg["reps"]
             )
-        for impl, f in by_impl.items():
-            us = _time(f, x, reps=reps)
+            for impl, us in best.items():
+                out.append({
+                    "op": "encode", "mode": mode, "fmt": fmt, "n": wf.nbits,
+                    "impl": impl, "elems": elems, "us": round(us, 1),
+                    "melem_s": round(elems / us, 1),
+                })
+    return out
+
+
+def bench_encode_fused(smoke: bool) -> list[dict]:
+    """Fused-encode epilogue vs matmul + separate codec kernel.
+
+    Same dequant-matmul, same wire output: the "separate" path writes the
+    f32 result to HBM and re-reads it through the standalone encode kernel
+    (the pre-fusion producer pattern), the "fused" path encodes the output
+    tile in-register at the accumulator flush (``out_fmt=``).  Melem/s is
+    output elements per wall, so the delta isolates the killed f32
+    round-trip + second kernel launch.
+    """
+    M, K, N = (256, 256, 256) if smoke else (512, 512, 512)
+    reps = 7 if smoke else 15
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.standard_normal((M, K)).astype(np.float32))
+    out = []
+    for fmt in WIRE_MATRIX:
+        wb = kref.codec_encode_ref(
+            jnp.asarray((rng.standard_normal((K, N)) * 0.2).astype(np.float32)), fmt
+        )
+        paths = {
+            "fused": lambda a, b, fmt=fmt: takum_matmul(a, b, fmt, out_fmt=fmt),
+            "separate": lambda a, b, fmt=fmt: takum_encode_2d(
+                takum_matmul(a, b, fmt), fmt
+            ),
+        }
+        # the two paths differ by ~20%, smaller than this container's noise
+        # spikes: alternate the passes (_best_of_alternating)
+        best = _best_of_alternating(paths, (x, wb), passes=2, reps=reps)
+        for path, us in best.items():
             out.append({
-                "op": "encode", "fmt": fmt, "n": wf.nbits, "impl": impl,
-                "elems": elems, "us": round(us, 1),
-                "melem_s": round(elems / us, 1),
+                "op": "encode_fused", "fmt": fmt, "n": wire_format(fmt).nbits,
+                "path": path, "M": M, "K": K, "N": N, "us": round(us, 1),
+                "melem_s": round(M * N / us, 1),
             })
     return out
 
@@ -302,6 +373,7 @@ def bench_train_step(smoke: bool) -> list[dict]:
 def run(smoke: bool = False) -> dict:
     decode = bench_decode(smoke)
     encode = bench_encode(smoke)
+    encode_fused = bench_encode_fused(smoke)
     matmul = bench_matmul(smoke)
     attention = bench_attention(smoke)
     train_step = bench_train_step(smoke)
@@ -318,6 +390,15 @@ def run(smoke: bool = False) -> dict:
             f"takum{n}": round(
                 _melem(decode, f"t{n}", "lut", mode)
                 / _melem(decode, f"t{n}", "bits", mode), 2
+            )
+            for n in (8, 16)
+        }
+
+    def _enc_speedups(mode):
+        return {
+            f"takum{n}": round(
+                _melem(encode, f"t{n}", "lut", mode)
+                / _melem(encode, f"t{n}", "bits", mode), 2
             )
             for n in (8, 16)
         }
@@ -366,20 +447,36 @@ def run(smoke: bool = False) -> dict:
         ),
     }
 
+    # fused-epilogue headline: wall-clock ratio separate / fused per format
+    # (> 1 = killing the f32 round-trip won)
+    def _fused_us(fmt, path):
+        return next(
+            r["us"] for r in encode_fused if r["fmt"] == fmt and r["path"] == path
+        )
+
+    encode_fused_speedup = {
+        fmt: round(_fused_us(fmt, "separate") / _fused_us(fmt, "fused"), 2)
+        for fmt in WIRE_MATRIX
+    }
+
     report = {
-        "schema": "bench_kernels/v3",
+        "schema": "bench_kernels/v4",
         "backend": jax.default_backend(),
         "interpret_mode": jax.default_backend() == "cpu",
         "smoke": smoke,
         "decode": decode,
         "encode": encode,
+        "encode_fused": encode_fused,
         "matmul": matmul,
         "attention": attention,
         "train_step": train_step,
+        "encode_fused_speedup": encode_fused_speedup,
         # headline A/B: interpret-style (per-op) harness — tracks instruction
         # count, the TPU-relevant quantity; "fused" = XLA-CPU-fused floor
         "decode_speedup_lut_vs_bits": _speedups("op_dispatch"),
         "decode_speedup_lut_vs_bits_fused": _speedups("fused"),
+        "encode_speedup_lut_vs_bits": _enc_speedups("op_dispatch"),
+        "encode_speedup_lut_vs_bits_fused": _enc_speedups("fused"),
         "format_matrix_decode_melem_s": fmt_decode,
         "takum_vs_zoo": takum_vs_zoo,
         "hbm_model_bytes_1024x1024": hbm_model(1024, 1024),
@@ -396,6 +493,11 @@ def emit(report: dict, write_json: bool) -> None:
             fh.write(
                 f"codec_{row['op']}_{mode}_{row['impl']},{row['fmt']},{row['us']},"
                 f"{row['melem_s']:.0f} Melem/s\n"
+            )
+        for row in report["encode_fused"]:
+            fh.write(
+                f"fused_epilogue_{row['path']}_{row['M']}x{row['K']}x{row['N']},"
+                f"{row['fmt']},{row['us']},{row['melem_s']:.0f} Melem/s\n"
             )
         for row in report["matmul"]:
             fh.write(
@@ -429,6 +531,11 @@ def main() -> None:
             f"kernel_{row['op']}_{mode}_{row['impl']}_{row['fmt']},"
             f"{row['us']:.0f},{row['melem_s']:.0f} Melem/s"
         )
+    for row in report["encode_fused"]:
+        print(
+            f"kernel_fused_epilogue_{row['fmt']}_{row['path']},"
+            f"{row['us']:.0f},{row['melem_s']:.0f} Melem/s"
+        )
     for row in report["matmul"]:
         print(
             f"kernel_dequant_matmul_{row['fmt']}_{row['impl']}_{row['M']}x{row['K']}x{row['N']},"
@@ -446,6 +553,18 @@ def main() -> None:
         )
     sp = report["decode_speedup_lut_vs_bits"]
     print(f"kernel_decode_speedup_lut_vs_bits,0,t8={sp['takum8']}x|t16={sp['takum16']}x")
+    se = report["encode_speedup_lut_vs_bits"]
+    sef = report["encode_speedup_lut_vs_bits_fused"]
+    print(
+        f"kernel_encode_speedup_lut_vs_bits,0,"
+        f"t8={se['takum8']}x|t16={se['takum16']}x"
+        f"|fused:t8={sef['takum8']}x|t16={sef['takum16']}x"
+    )
+    fs = report["encode_fused_speedup"]
+    print(
+        "kernel_encode_fused_speedup,0,"
+        + "|".join(f"{k}={v}x" for k, v in fs.items())
+    )
     zoo = report["takum_vs_zoo"]
     print(
         "kernel_takum_vs_zoo,0,"

@@ -73,6 +73,13 @@ def _check_format_dispatch(report: dict) -> None:
     assert not missing, (
         f"registered formats missing from the bench decode matrix: {sorted(missing)}"
     )
+    # every registered format must also have encode rows (the encode path is
+    # the expensive codec direction — it cannot silently drop off the bench)
+    enc_fmts = {r["fmt"] for r in report["encode"]}
+    missing_enc = registered - enc_fmts
+    assert not missing_enc, (
+        f"registered formats missing from the bench encode matrix: {sorted(missing_enc)}"
+    )
     # probe the real dispatch path (kernel or ref, per backend) per format
     for name in sorted(registered):
         wf = wire_format(name)
@@ -87,8 +94,10 @@ def _validate_bench_json(smoke: bool, fold_keys: set) -> None:
 
     with open(bench_json_path(smoke)) as fh:
         report = json.load(fh)
-    required = {"schema", "decode", "matmul", "attention", "train_step",
-                "decode_speedup_lut_vs_bits", "hbm_model_bytes_1024x1024",
+    required = {"schema", "decode", "encode", "encode_fused", "matmul",
+                "attention", "train_step", "decode_speedup_lut_vs_bits",
+                "encode_speedup_lut_vs_bits", "encode_fused_speedup",
+                "hbm_model_bytes_1024x1024",
                 "format_matrix_decode_melem_s", "takum_vs_zoo",
                 } | fold_keys
     missing = required - report.keys()
@@ -96,6 +105,12 @@ def _validate_bench_json(smoke: bool, fold_keys: set) -> None:
     impls = {(r["fmt"], r["impl"]) for r in report["decode"]}
     assert {("t8", "bits"), ("t8", "lut"), ("t16", "bits"), ("t16", "lut"),
             ("e4m3", "lut"), ("e5m2", "lut"), ("bf16", "bits")} <= impls, impls
+    enc_impls = {(r["fmt"], r["impl"]) for r in report["encode"]}
+    assert {("t8", "lut"), ("t16", "lut"), ("t16", "bits"), ("e4m3", "bits"),
+            ("e5m2", "bits"), ("bf16", "bits")} <= enc_impls, enc_impls
+    fused = {(r["fmt"], r["path"]) for r in report["encode_fused"]}
+    assert {("t8", "fused"), ("t8", "separate"), ("t16", "fused"),
+            ("t16", "separate")} <= fused, fused
     assert any(not r["aligned"] for r in report["matmul"]), "need non-aligned matmul shapes"
     if "collectives" in fold_keys:
         red = report["collectives"]["wire_reduction_vs_f32"]

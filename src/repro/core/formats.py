@@ -181,8 +181,12 @@ class WireFormat:
 
     @property
     def supports_lut_encode(self) -> bool:
-        """Exponent-byte encode tables exist for 8-bit formats only."""
-        return self.nbits == 8
+        """Table-driven encode available: 8-bit formats use the 256-entry
+        exponent-byte table pair; takum16 uses the two-level scheme (256-entry
+        exponent-byte top level + per-regime rounding sub-table).  bf16 is
+        deliberately excluded: its encode is already a 2-op shift-round, so a
+        table path could only add gathers."""
+        return self.nbits == 8 or (self.family == "takum" and self.nbits == 16)
 
     @property
     def supports_sr(self) -> bool:

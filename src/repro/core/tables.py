@@ -37,6 +37,22 @@ the Pallas kernels gather from, for any registered wire format:
   consecutive-code carry reproduces for free.  Verified exhaustively in
   ``tests/test_tables.py`` / ``tests/test_formats.py``.
 
+* **Encode tables (takum16)** — the *two-level* scheme: a 256-entry
+  exponent-byte top level (``meta``: the magnitude code of the binade bottom
+  ``2**c`` plus the takum regime ``r`` of that characteristic) selecting a
+  per-regime mantissa-rounding sub-table (``sub[r]``: the mantissa shift
+  ``23 - p`` with ``p = 11 - r`` — every f32-reachable binade of takum16
+  keeps p >= 4 mantissa bits, so unlike takum8 there is no threshold path).
+  Encode is then two gathers (exponent byte -> (base, r), r -> shift) plus
+  the same RNE-with-ties-to-the-even-code integer tail as the 8-bit path.
+  The builder verifies every binade against the float64 oracle: the binade
+  bottom decodes exactly to ``2**c``, codes are uniformly spaced, the
+  rounding boundaries are exactly the 17-bit takum values ``2*m + 1``
+  (append-a-one midpoint property), and the mantissa-overflow carry lands on
+  the code of ``2**(c+1)`` — so carry-through-binade reproduces the oracle's
+  RNE on the bit string for free.  Exhaustive 2^16-code equivalence lives in
+  ``tests/test_tables.py``.
+
 Subnormal f32 inputs flush to zero (DAZ): XLA CPU and TPU both treat f32
 subnormals as zero, so the tables bake that semantic in explicitly rather
 than inheriting it from backend flags.  (All 8-bit wire formats' minpos is
@@ -56,6 +72,8 @@ __all__ = [
     "decode_table_bits",
     "decode_table_f32",
     "encode8_tables",
+    "encode16_tables",
+    "encode_tables",
     "table_nbytes",
     "ENC8_THR_FLAG",
     "ENC8_THR_NEVER",
@@ -261,12 +279,88 @@ def _encode8_tables_signmag(name: str) -> tuple[np.ndarray, np.ndarray]:
 
 
 @functools.lru_cache(maxsize=None)
+def _encode16_tables_takum() -> tuple[np.ndarray, np.ndarray]:
+    """Two-level takum16 encode tables from the f64-oracle boundary construction.
+
+    Top level ``meta`` (uint32[256], indexed by the f32 exponent byte):
+    ``(base << 8) | r`` with ``base`` the magnitude code of the binade bottom
+    ``2**c`` and ``r`` the takum regime of characteristic ``c`` — the selector
+    into the second level.  Second level ``sub`` (int32[128], entries 0..7
+    live, padded to a lane for the kernel operand): the mantissa shift
+    ``23 - p`` of regime ``r``.  Every f32-reachable binade is a shift-path
+    binade (p = 11 - r >= 4), so there is no threshold table; the zero binade
+    (e = 0) and inf/NaN (e = 255) are special-cased in the encode tail (DAZ
+    and NaR respectively).  Pure numpy on purpose: trace-safe to build from
+    inside eager shard_map bodies, unlike the jax-built decode tables.
+    """
+    values = takum_np.decode(np.arange(1 << 15, dtype=np.uint64), 16)
+    bounds = takum_np.decode(2 * np.arange((1 << 15) - 1, dtype=np.uint64) + 1, 17)
+
+    meta = np.zeros(256, dtype=np.uint32)
+    sub = np.full(128, 23, dtype=np.int32)  # unused rows: shift-out-everything
+    for e in range(1, 255):
+        c = e - 127
+        scale = 2.0**c  # exact in f64
+        base = int(np.searchsorted(values, scale))
+        assert values[base] == scale, (e, base)
+        g = (c + 1) if c >= 0 else -c
+        r = g.bit_length() - 1  # takum regime of characteristic c
+        p = 11 - r  # mantissa bits a takum16 code keeps at this c
+        assert p >= 4, (e, r)
+        # oracle verification of the whole binade: codes base..base+2**p are
+        # consecutive and uniformly spaced, boundaries sit at the exact value
+        # midpoints (the 17-bit append-a-one takums), and the carry target
+        # base + 2**p is the code of 2**(c+1)
+        step = scale / (1 << p)
+        j = np.arange(1 << p)
+        assert np.array_equal(values[base : base + (1 << p)], scale + j * step), e
+        assert values[base + (1 << p)] == 2.0 * scale, e
+        assert np.array_equal(
+            bounds[base : base + (1 << p)], scale + (2 * j + 1) * (step / 2.0)
+        ), e
+        if sub[r] != 23:
+            assert sub[r] == 23 - p, (e, r)
+        sub[r] = 23 - p
+        meta[e] = np.uint32((base << 8) | r)
+    # e = 0 (zero + f32 subnormals) -> DAZ; e = 255 (inf/NaN) -> NaR: both
+    # handled explicitly by the encode tail, entries left at 0 / unused.
+    meta.setflags(write=False)
+    sub.setflags(write=False)
+    return meta, sub
+
+
+def encode16_tables(fmt="t16") -> tuple[np.ndarray, np.ndarray]:
+    """(meta uint32[256], sub int32[128]): two-level exact f32 -> takum16
+    encode tables.  ``meta`` is indexed by the f32 exponent byte and yields
+    ``(base << 8) | r``; ``sub[r]`` is the regime's mantissa shift.  Exponent
+    0 (zero/subnormals) encodes to 0 (DAZ) and exponent 255 (inf/NaN) to NaR,
+    both special-cased by the caller (:func:`repro.kernels.lut.encode_takum16_lut`).
+    """
+    wf = _wire(fmt)
+    if wf.name != "t16":
+        raise ValueError(f"two-level encode tables exist for t16 only, got {wf.name!r}")
+    return _encode16_tables_takum()
+
+
+def encode_tables(fmt):
+    """The format's LUT-encode table tuple: (meta, thr) for 8-bit formats,
+    (meta, sub) for takum16 — matching :func:`repro.kernels.lut.encode_wire_lut`."""
+    wf = _wire(fmt)
+    if not wf.supports_lut_encode:
+        raise ValueError(f"no encode tables for {wf.name!r} ({wf.nbits}b)")
+    return encode8_tables(fmt) if wf.nbits == 8 else encode16_tables(fmt)
+
+
+@functools.lru_cache(maxsize=None)
 def _encode8_tables_by_name(name: str) -> tuple[np.ndarray, np.ndarray]:
     from .formats import wire_format
 
     wf = wire_format(name)
-    if not wf.supports_lut_encode:
-        raise ValueError(f"encode tables are 8-bit only, got {name!r} ({wf.nbits}b)")
+    if wf.nbits != 8:
+        raise ValueError(
+            f"exponent-byte table pairs are 8-bit only, got {name!r} "
+            f"({wf.nbits}b; takum16 uses encode16_tables)"
+        )
     if wf.family == "takum":
         return _encode8_tables_takum()
     if wf.family == "ofp8":

@@ -38,24 +38,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.formats import wire_format
-from repro.core.tables import decode_table_f32
-from repro.core.takum import takum_encode, takum_encode_sr
+from repro.core.takum import takum_encode_sr
+from repro.kernels.lut import decode_jnp_fast, encode_jnp_fast
 
 IS_STUB = False
-
-
-def _lut_decode(bits, fmt):
-    """One gather from the format's exact f32 decode LUT.
-
-    ``decode_table_f32`` caches the *numpy* table (lru by canonical name);
-    the ``jnp.asarray`` wrap happens per call on purpose — a jnp constant
-    materialised inside a traced region (e.g. a scan body) is a tracer and
-    must never outlive its trace.
-    """
-    return jnp.take(
-        jnp.asarray(decode_table_f32(wire_format(fmt).name)),
-        bits.astype(jnp.int32), axis=0,
-    )
 
 
 def wire_codec(fmt, *, sr_key=None):
@@ -83,11 +69,14 @@ def wire_codec(fmt, *, sr_key=None):
         )
     if wf.family == "takum" and sr_key is not None:
         encode = lambda v: takum_encode_sr(v, sr_key, wf.nbits)
-    elif wf.family == "takum":
-        encode = lambda v: takum_encode(v, wf.nbits)
     else:
-        encode = lambda v: wf.encode_jnp(v).astype(wf.storage)
-    return encode, (lambda m: _lut_decode(m, wf.name))
+        # producer-side fast encode: the per-format measured winner (table
+        # path for takum — bit-identical to takum_encode — short bit-twiddle
+        # for OFP8), so the ring's encode stops being the heaviest op in a
+        # compressed psum.  The takum encode tables are numpy-built, hence
+        # safe to first-build inside eager shard_map traces.
+        encode = lambda v: encode_jnp_fast(v, wf.name)
+    return encode, (lambda m: decode_jnp_fast(m, wf.name))
 
 
 def axis_size(axis_name) -> int:

@@ -62,7 +62,9 @@ def pipeline_apply(stage_fn, stage_params, x, *, mesh, axis: str = "pipe",
         if wire_format(name).supports_lut_decode and name != "bf16":
             # build the decode LUT *here*, outside the shard_map body: an
             # eager shard_map trace cannot host the table construction
-            # (ensure_compile_time_eval only escapes jit traces)
+            # (ensure_compile_time_eval only escapes jit traces).  The
+            # encode side needs no such care: wire_codec's fast encode
+            # tables are numpy-built (repro.core.tables), trace-safe.
             decode_table_f32(name)
         hop_encode, hop_decode = wire_codec(name)
     else:

@@ -8,10 +8,11 @@ every kernel hot path (matmul, dual-matmul, decode-attention, 2D codec)
 accept any registered :class:`~repro.core.formats.WireFormat` through one
 ``decode_impl={"bits", "lut"}`` knob.  "bits" dispatches to the format
 family's branch-free decoder (takum bit-assembly, OFP8 field unpack, bf16
-shift-bitcast); "lut" gathers.  Per-format defaults live in
+shift-bitcast); "lut" gathers.  Per-format, per-op defaults live in
 ``DEFAULT_DECODE_IMPL`` (LUT for the 8-bit formats — 1 KiB tables — and
 bits for the 16-bit ones, whose 256 KiB tables occupy a meaningful VMEM
-fraction; the A/B switch is the point).
+fraction; the A/B switch is the point) and ``DEFAULT_ENCODE_IMPL`` (the
+measured encode winners differ — see that table's comment).
 
 Tables enter kernels as ordinary pallas_call operands with a whole-array
 BlockSpec, shaped ``(2**n // 128, 128)`` so they tile cleanly into VMEM
@@ -28,7 +29,7 @@ from repro.core.formats import wire_format
 from repro.core.tables import (
     ENC8_THR_FLAG,
     decode_table_f32,
-    encode8_tables,
+    encode_tables,
     ofp8_overflow_code,
 )
 from .common import decode_takum_f32, encode_takum_from_f32
@@ -43,19 +44,58 @@ DEFAULT_DECODE_IMPL = {
     "e5m2": "lut",
     "bf16": "bits",
 }
+#: per-format default *encode* implementation.  Decode and encode winners
+#: differ.  Takum: the bit-twiddle encode is the heaviest codec body in the
+#: stack (~40 integer ops incl. a popcount regime scan), so the table path
+#: wins in *both* bench modes — op-dispatch (the instruction-count/TPU
+#: proxy) by 3-8x and XLA-fused consistently across rounds (t8 ~1.3-1.4x,
+#: t16 ~1.1-1.3x; BENCH_kernels.json encode rows) — lut for t8 AND t16.
+#: OFP8: the field packers are ~15 short ops, and in the fused mode the two
+#: extra gathers buy no consistent win — the A/B hovers inside the
+#: container's ~+-20% noise with bits ahead in most measurement rounds,
+#: including the PR 3 baseline that exposed the old "8-bit defaults to
+#: LUT" rule as wrong for OFP8 encode (e4m3 bits 2663 vs lut 2174 Melem/s,
+#: e5m2 2296 vs 2112) — so e4m3/e5m2 default to bits, which also keeps
+#: their 2 KiB encode tables out of VMEM.  bf16 encode is a 2-op
+#: shift-round: bits, untabulated.
+DEFAULT_ENCODE_IMPL = {
+    "t8": "lut",
+    "t16": "lut",
+    "e4m3": "bits",
+    "e5m2": "bits",
+    "bf16": "bits",
+}
 #: supported values for the decode_impl/encode_impl knobs
 DECODE_IMPLS = ("bits", "lut")
 
 
-def resolve_impl(impl: str | None, fmt) -> str:
-    """None -> per-format default; otherwise validate the explicit choice."""
+def resolve_impl(impl: str | None, fmt, op: str = "decode") -> str:
+    """None -> per-format default; otherwise validate the explicit choice.
+
+    ``op`` selects the default table ("decode" or "encode") and the
+    tabulability check — decode tables exist for every <=16-bit format,
+    encode tables for the 8-bit formats and takum16.
+    """
+    assert op in ("decode", "encode"), op
     wf = wire_format(fmt)
+    if wf.family == "takum" and wf.nbits > 16:
+        # the kernel codec bodies are only valid for narrow takums (the
+        # branch-free encode needs rounding shift 28 + r - n >= 0, the f32
+        # decode needs p <= 23): reject t32 loudly instead of silently
+        # corrupting bits — wide takums go through the registry codec
+        # (ref.codec_*_ref / wf.encode_jnp), not the Pallas kernels
+        raise ValueError(
+            f"kernel codecs support <=16-bit takums, got {wf.name!r}; "
+            "use the jnp reference path"
+        )
+    defaults = DEFAULT_DECODE_IMPL if op == "decode" else DEFAULT_ENCODE_IMPL
     if impl is None:
-        return DEFAULT_DECODE_IMPL.get(wf.name, "bits")
+        return defaults.get(wf.name, "bits")
     if impl not in DECODE_IMPLS:
-        raise ValueError(f"decode_impl must be one of {DECODE_IMPLS}, got {impl!r}")
-    if impl == "lut" and not wf.supports_lut_decode:
-        raise ValueError(f"decode_impl='lut': 2**{wf.nbits} entries untabulable")
+        raise ValueError(f"{op}_impl must be one of {DECODE_IMPLS}, got {impl!r}")
+    tabulable = wf.supports_lut_decode if op == "decode" else wf.supports_lut_encode
+    if impl == "lut" and not tabulable:
+        raise ValueError(f"{op}_impl='lut': no tables for {wf.name} ({wf.nbits}b)")
     return impl
 
 
@@ -86,9 +126,15 @@ def decode_table_operand(fmt):
 
 
 def encode8_table_operands(fmt="t8"):
-    """(meta, thr) 8-bit encode tables as 2D operands (2, 128) each."""
-    meta, thr = encode8_tables(fmt)
-    return jnp.asarray(meta).reshape(-1, 128), jnp.asarray(thr).reshape(-1, 128)
+    """(meta, thr) 8-bit encode-table operands (back-compat PR-1 name)."""
+    return encode_table_operands(fmt)
+
+
+def encode_table_operands(fmt):
+    """The format's LUT-encode tables as a tuple of 2D lanes-major operands:
+    (meta, thr) for the 8-bit formats, (meta, sub) for takum16 — consumed
+    positionally by :func:`encode_wire_lut`."""
+    return tuple(jnp.asarray(t).reshape(-1, 128) for t in encode_tables(fmt))
 
 
 def decode_wire_lut(tab, bits):
@@ -105,23 +151,30 @@ def decode_wire_lut(tab, bits):
 decode_takum_lut = decode_wire_lut
 
 
+def _shift_round_rne(base, s, m23):
+    """The shift-path rounding core: ``base + RNE(m23 >> s)`` with ties to
+    the even *code*; the carry across binades is exact because both takum
+    codes and IEEE/OFP8 magnitude codes are consecutive integers in value
+    order.  All operands uint32 — the single copy of the tie-to-even logic,
+    shared by the 8-bit exponent-byte tail and the two-level takum16 tail.
+    """
+    kept = m23 >> s
+    guard = (m23 >> (s - 1)) & 1
+    below = m23 & ((_U(1) << (s - 1)) - 1)
+    rnd = (guard == 1) & ((below != 0) | (((base + kept) & 1) == 1))
+    return base + kept + rnd.astype(_U)
+
+
 def _round_shift_or_threshold(m23, mt, t):
-    """Shared encode tail: exponent-byte table entry -> magnitude code.
+    """Shared 8-bit encode tail: exponent-byte table entry -> magnitude code.
 
     Threshold path: the binade holds at most one rounding boundary.  Shift
-    path: ``base + RNE(m23 >> s)`` with ties to the even *code*; the carry
-    across binades is exact because both takum codes and IEEE/OFP8
-    magnitude codes are consecutive integers in value order.
+    path: :func:`_shift_round_rne`.
     """
     base = mt >> 8
     s = mt & _U(0x7F)
     mag_t = base + (m23 > t).astype(_U)
-    m23u = m23.astype(_U)
-    kept = m23u >> s
-    guard = (m23u >> (s - 1)) & 1
-    below = m23u & ((_U(1) << (s - 1)) - 1)
-    rnd = (guard == 1) & ((below != 0) | (((base + kept) & 1) == 1))
-    mag_s = base + kept + rnd.astype(_U)
+    mag_s = _shift_round_rne(base, s, m23.astype(_U))
     return jnp.where((mt & _U(ENC8_THR_FLAG)) != 0, mag_t, mag_s)
 
 
@@ -184,3 +237,139 @@ def encode_wire8_lut(x, meta, thr, fmt):
     if wf.family == "ofp8":
         return encode_ofp8_lut(x, meta, thr, wf.name)
     raise ValueError(f"no LUT encode for family {wf.family!r}")
+
+
+def encode_takum16_lut(x, meta, sub):
+    """Two-level LUT exact f32 -> takum16 encode (two gathers + integer tail).
+
+    Bit-identical to ``takum.takum_encode(x, 16, mode="linear")``: gather 1
+    maps the f32 exponent byte to ``(base << 8) | r`` (binade-bottom code +
+    regime), gather 2 maps the regime to its mantissa shift, then the shared
+    RNE tail rounds with ties to the even *code* — the mantissa-overflow
+    carry crosses binades exactly because takum codes are consecutive
+    integers in value order.  No threshold path exists (takum16 keeps
+    p = 11 - r >= 4 mantissa bits in every f32-reachable binade) and no
+    saturation clamp is needed (|c| <= 128 after carry, far from the +-255
+    takum16 rails).  DAZ (f32 subnormals -> 0) and NaR are explicit.
+    ``meta``/``sub`` come from :func:`encode_table_operands`.
+    """
+    bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32), _U)
+    neg = bits >> 31
+    a = bits & _U(0x7FFFFFFF)
+    is_nar = a >= _U(0x7F800000)
+    is_zero = a < _U(0x00800000)  # zero + f32 subnormals (DAZ)
+
+    e = (a >> 23).astype(jnp.int32)
+    m23 = a & _U(0x7FFFFF)
+    mt = jnp.take(meta.reshape(-1), e, axis=0)
+    base = mt >> 8
+    s = jnp.take(sub.reshape(-1), (mt & _U(0xFF)).astype(jnp.int32), axis=0).astype(_U)
+    mag = _shift_round_rne(base, s, m23)
+
+    enc = jnp.where(neg == 1, (_U(0) - mag) & _U(0xFFFF), mag)
+    enc = jnp.where(is_zero, _U(0), enc)
+    enc = jnp.where(is_nar, _U(0x8000), enc)
+    return enc
+
+
+def encode_wire_lut(x, tabs, fmt):
+    """Generic table-driven encode: dispatch on the format's table scheme.
+
+    ``tabs`` is the operand tuple from :func:`encode_table_operands` —
+    (meta, thr) for the 8-bit exponent-byte scheme, (meta, sub) for the
+    takum16 two-level scheme.
+    """
+    wf = wire_format(fmt)
+    if wf.nbits == 8:
+        return encode_wire8_lut(x, tabs[0], tabs[1], wf.name)
+    if wf.name == "t16":
+        return encode_takum16_lut(x, tabs[0], tabs[1])
+    raise ValueError(f"no LUT encode for {wf.name!r}")
+
+
+# ---------------------------------------------------------------------------
+# fused encode epilogues (shared by matmul, dual-matmul, decode-attention)
+# ---------------------------------------------------------------------------
+
+
+def resolve_out_fmt(out_fmt, encode_impl):
+    """Normalise a producer kernel's fused-encode knobs.
+
+    Returns ``(canonical_name, impl)``, or ``(None, None)`` for a plain f32
+    output.  The shared front half of every ``out_fmt=`` entry point.
+    """
+    if out_fmt is None:
+        return None, None
+    name = wire_format(out_fmt).name
+    return name, resolve_impl(encode_impl, name, op="encode")
+
+
+def encode_epilogue(out_fmt, out_impl, enc_tab_refs):
+    """The in-register wire-encode tail a producer kernel applies to its f32
+    output tile right before the HBM store (the fused-encode contract: the
+    epilogue encodes exactly the f32 values the unfused kernel would have
+    written, so fused == encode(unfused) bit-for-bit).  Returns f32 tile ->
+    uint code tile; ``enc_tab_refs`` are the LUT operand refs (empty for the
+    bits impl)."""
+    if out_impl == "lut":
+        return lambda acc: encode_wire_lut(
+            acc, tuple(t[...] for t in enc_tab_refs), out_fmt
+        )
+    return encode_bits_fn(out_fmt)
+
+
+def encode_epilogue_operands(out_fmt, out_impl):
+    """The extra pallas operands the epilogue needs (LUT tables, or none)."""
+    if out_fmt is not None and out_impl == "lut":
+        return encode_table_operands(out_fmt)
+    return ()
+
+
+# ---------------------------------------------------------------------------
+# trace-safe fast jnp codecs (the producer-side encode path outside kernels)
+# ---------------------------------------------------------------------------
+
+
+def encode_jnp_fast(x, fmt):
+    """f32 -> packed wire bits via the format's *measured-winner* encode impl.
+
+    Pure jnp — safe inside jit, scan bodies and shard_map regions (unlike a
+    pallas call) — and bit-identical to ``takum_encode`` / ``encode_jnp`` by
+    the exhaustive table tests.  Takum formats take the table path (two
+    gathers + integer tail beats the ~40-op popcount bit-twiddle:
+    ``DEFAULT_ENCODE_IMPL``); OFP8/bf16 keep their short branch-free
+    packers.  The takum encode tables are numpy-built (no jax in the
+    builder), so first use inside an eager shard_map trace is safe; the
+    ``jnp.asarray`` wrap happens per call on purpose — a jnp constant
+    materialised inside a traced region must never outlive its trace.
+    """
+    wf = wire_format(fmt)
+    xf = x.astype(jnp.float32)
+    # supports_lut_encode first: wide takums must not reach resolve_impl
+    # (which rejects them for the kernel paths) — they short-circuit to the
+    # registry codec below
+    if wf.supports_lut_encode and resolve_impl(None, wf.name, op="encode") == "lut":
+        tabs = tuple(jnp.asarray(t) for t in encode_tables(wf.name))
+        return encode_wire_lut(xf, tabs, wf.name).astype(wf.storage)
+    # registry codec, NOT encode_bits_fn: the kernel bit-twiddle encoder is
+    # only valid for n <= 28 (its rounding shift t = 28 + r - n must be
+    # >= 0), while wf.encode_jnp is correct for every registered width —
+    # t32 QTensors/KV caches must keep the exact takum_encode path
+    return wf.encode_jnp(xf).astype(wf.storage)
+
+
+def decode_jnp_fast(bits, fmt):
+    """Packed wire bits -> f32 with kernel clamp semantics, one LUT gather
+    for the tabulated formats (bf16 keeps its 2-op shift-bitcast).  The jnp
+    sibling of ``decode_wire_lut``; same per-call ``jnp.asarray`` rule as
+    :func:`encode_jnp_fast`.
+    """
+    wf = wire_format(fmt)
+    if wf.supports_lut_decode and wf.name != "bf16":
+        return decode_wire_lut(jnp.asarray(decode_table_f32(wf.name)), bits)
+    if wf.family == "takum" and wf.nbits > 28:
+        # the branch-free f32 bit-assembly decoder needs p <= 23 (n <= 28):
+        # wide takums use the registry's exact value decoder, mirroring
+        # encode_jnp_fast's registry-codec fallback
+        return wf.decode_jnp(bits)
+    return decode_bits_fn(wf.name)(bits)

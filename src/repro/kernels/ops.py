@@ -11,10 +11,15 @@ useful inside large jitted programs (dry-run lowering) where interpret-mode
 pallas calls would be slow, and as an A/B switch in benchmarks.
 
 ``decode_impl``/``encode_impl`` select the in-kernel codec strategy
-("bits" = the family's branch-free decode, "lut" = VMEM table gather; None
-picks the per-format default — LUT for the 8-bit formats, bits for the
-16-bit ones).  The reference fallback ignores the knob (it defines the
-semantics both impls reproduce).
+("bits" = the family's branch-free codec, "lut" = VMEM table gather; None
+picks the per-op, per-format measured winner in
+``lut.DEFAULT_DECODE_IMPL``/``DEFAULT_ENCODE_IMPL``).  The reference
+fallback ignores the knob (it defines the semantics both impls reproduce).
+
+``encode``/``decode`` take any rank >= 1 (flatten-to-2D fast path onto the
+element-wise codec kernels); the producer ops (``matmul``/``dual_matmul``/
+``decode_attention``) take ``out_fmt=`` to fuse the output wire encode into
+the kernel epilogue and return packed bits instead of f32.
 """
 
 from __future__ import annotations
@@ -61,44 +66,111 @@ def _name(fmt) -> str:
     return wire_format(fmt).name
 
 
+def _as_2d(x):
+    """ND -> 2D view for the element-wise codec kernels (flatten-to-2D).
+
+    Returns ``(x2d, orig_shape_or_None)``; None means no reshape happened.
+    1D becomes one padded row; >=3D collapses the leading dims onto the
+    rows (the codec is element-wise, so any 2D cover is semantically
+    identical — this is what keeps 3D/5D dist and KV-cache payloads on the
+    kernel path instead of silently falling back to the jnp reference).
+    """
+    if x.ndim == 2:
+        return x, None
+    if x.ndim == 1:
+        return x.reshape(1, -1), x.shape
+    return x.reshape(-1, x.shape[-1]), x.shape
+
+
+def _kernel_fmt_ok(name: str) -> bool:
+    """Formats the Pallas kernel codecs can move: wide takums (t32) are
+    excluded — the kernel codec bodies only cover n <= 16 (``resolve_impl``
+    rejects them loudly) — and stay on the jnp reference, which is exact
+    for every registered width.  This also fixes the pre-PR silent
+    corruption of 2D t32 payloads."""
+    wf = wire_format(name)
+    return not (wf.family == "takum" and wf.nbits > 16)
+
+
+def _kernelable(x, name: str) -> bool:
+    """Inputs the 2D codec kernels can take after flatten-to-2D."""
+    return (
+        _USE_KERNELS and x.ndim >= 1 and x.size > 0 and _kernel_fmt_ok(name)
+    )
+
+
 def encode(x, fmt, encode_impl=None):
-    """float32 [..., R, C] -> packed wire-format bits."""
+    """float32 [...] -> packed wire-format bits (same shape).
+
+    Any rank >= 1 rides the Pallas codec kernel via the flatten-to-2D fast
+    path; 0-d/empty inputs, wide takums (t32) and ``use_kernels(False)``
+    fall back to the jnp reference (see ``_kernelable``).
+    """
     name = _name(fmt)
-    if _USE_KERNELS and x.ndim == 2:
-        return takum_encode_2d(x, name, encode_impl=encode_impl)
+    if _kernelable(x, name):
+        x2, shape = _as_2d(x)
+        out = takum_encode_2d(x2, name, encode_impl=encode_impl)
+        return out if shape is None else out.reshape(shape)
     return ref.codec_encode_ref(x, name)
 
 
 def decode(bits, fmt, decode_impl=None):
     name = _name(fmt)
-    if _USE_KERNELS and bits.ndim == 2:
-        return takum_decode_2d(bits, name, decode_impl=decode_impl)
+    if _kernelable(bits, name):
+        b2, shape = _as_2d(bits)
+        out = takum_decode_2d(b2, name, decode_impl=decode_impl)
+        return out if shape is None else out.reshape(shape)
     return ref.codec_decode_ref(bits, name)
 
 
-def matmul(x, w_bits, fmt, out_dtype=jnp.float32, decode_impl=None, **blocks):
-    """x @ decode(w_bits): the dequant-in-kernel GEMM (VDPPT analogue)."""
+def matmul(x, w_bits, fmt, out_dtype=jnp.float32, decode_impl=None,
+           out_fmt=None, encode_impl=None, **blocks):
+    """x @ decode(w_bits): the dequant-in-kernel GEMM (VDPPT analogue).
+
+    ``out_fmt`` fuses the output wire encode into the kernel epilogue
+    (returns packed bits; semantics ``encode(matmul)`` — ref.fused_matmul_ref).
+    """
     name = _name(fmt)
-    if _USE_KERNELS:
+    out_name = _name(out_fmt) if out_fmt is not None else None
+    if _USE_KERNELS and _kernel_fmt_ok(name) and (
+        out_name is None or _kernel_fmt_ok(out_name)
+    ):
         return takum_matmul(
-            x, w_bits, name, out_dtype=out_dtype, decode_impl=decode_impl, **blocks
+            x, w_bits, name, out_dtype=out_dtype, decode_impl=decode_impl,
+            out_fmt=out_name, encode_impl=encode_impl, **blocks
         )
+    if out_fmt is not None:
+        return ref.fused_matmul_ref(x, w_bits, name, out_name)
     return ref.takum_matmul_ref(x, w_bits, name, out_dtype=out_dtype)
 
 
-def dual_matmul(x_bits, w_bits, fmt, out_dtype=jnp.float32, decode_impl=None, **blocks):
+def dual_matmul(x_bits, w_bits, fmt, out_dtype=jnp.float32, decode_impl=None,
+                out_fmt=None, encode_impl=None, **blocks):
     name = _name(fmt)
-    if _USE_KERNELS:
+    out_name = _name(out_fmt) if out_fmt is not None else None
+    if _USE_KERNELS and _kernel_fmt_ok(name) and (
+        out_name is None or _kernel_fmt_ok(out_name)
+    ):
         return takum_dual_matmul(
-            x_bits, w_bits, name, out_dtype=out_dtype, decode_impl=decode_impl, **blocks
+            x_bits, w_bits, name, out_dtype=out_dtype, decode_impl=decode_impl,
+            out_fmt=out_name, encode_impl=encode_impl, **blocks
         )
+    if out_fmt is not None:
+        return ref.fused_dual_matmul_ref(x_bits, w_bits, name, out_name)
     return ref.takum_dual_matmul_ref(x_bits, w_bits, name, out_dtype=out_dtype)
 
 
-def decode_attention(q, k_bits, v_bits, fmt, decode_impl=None, **kw):
+def decode_attention(q, k_bits, v_bits, fmt, decode_impl=None, out_fmt=None,
+                     encode_impl=None, **kw):
     name = _name(fmt)
-    if _USE_KERNELS:
+    out_name = _name(out_fmt) if out_fmt is not None else None
+    if _USE_KERNELS and _kernel_fmt_ok(name) and (
+        out_name is None or _kernel_fmt_ok(out_name)
+    ):
         return takum_decode_attention(
-            q, k_bits, v_bits, name, decode_impl=decode_impl, **kw
+            q, k_bits, v_bits, name, decode_impl=decode_impl,
+            out_fmt=out_name, encode_impl=encode_impl, **kw
         )
+    if out_fmt is not None:
+        return ref.fused_decode_attention_ref(q, k_bits, v_bits, name, out_name)
     return ref.decode_attention_ref(q, k_bits, v_bits, name)

@@ -24,9 +24,13 @@ def codec_encode_ref(x, fmt):
 
 
 def codec_decode_ref(bits, fmt):
-    """packed wire format -> float32 with kernel clamp semantics."""
+    """packed wire format -> float32 with kernel clamp semantics.
+
+    Wide takums (n > 28) exceed the branch-free f32-bit decoder and use the
+    registry's value decoder instead (same f32 clamping, and it keeps the
+    f32-subnormal range a 32-bit takum can actually reach)."""
     wf = wire_format(fmt)
-    if wf.family == "takum":
+    if wf.family == "takum" and wf.nbits <= 28:
         out = takum_decode_f32bits(bits, wf.nbits)
         return jax.lax.bitcast_convert_type(out, jnp.float32)
     return wf.decode_jnp(bits)
@@ -45,6 +49,30 @@ def takum_dual_matmul_ref(x_bits, w_bits, fmt, out_dtype=jnp.float32):
     x = codec_decode_ref(x_bits, fmt)
     w = codec_decode_ref(w_bits, fmt)
     return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def fused_matmul_ref(x, w_bits, fmt, out_fmt):
+    """Fused-encode matmul semantics: ``encode(matmul_ref(...))``.
+
+    This *defines* the ``out_fmt=`` epilogue contract: the epilogue owns no
+    rounding of its own — it is exactly the format's RNE wire encode applied
+    to the f32 matmul output.  The kernel reproduces it bit-for-bit whenever
+    its accumulation order matches the reference dot (single K tile); with
+    multiple K tiles the f32 accumulations may differ in the last ulp, and
+    the fused kernel instead equals ``encode(kernel f32 output)`` exactly
+    (asserted in tests/test_kernels.py).
+    """
+    return codec_encode_ref(takum_matmul_ref(x, w_bits, fmt), out_fmt)
+
+
+def fused_dual_matmul_ref(x_bits, w_bits, fmt, out_fmt):
+    """``encode(dual_matmul_ref(...))`` — bits in, bits out."""
+    return codec_encode_ref(takum_dual_matmul_ref(x_bits, w_bits, fmt), out_fmt)
+
+
+def fused_decode_attention_ref(q, k_bits, v_bits, fmt, out_fmt):
+    """``encode(decode_attention_ref(...))`` — the fused-epilogue oracle."""
+    return codec_encode_ref(decode_attention_ref(q, k_bits, v_bits, fmt), out_fmt)
 
 
 def decode_attention_ref(q, k_bits, v_bits, fmt, *, scale=None):

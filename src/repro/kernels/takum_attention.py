@@ -39,18 +39,28 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.formats import wire_format
 from .common import choose_block, dim_mask, interpret_default, round_up
-from .lut import decode_bits_fn, decode_table_operand, decode_wire_lut, resolve_impl
+from .lut import (
+    decode_bits_fn,
+    decode_table_operand,
+    decode_wire_lut,
+    encode_epilogue,
+    encode_epilogue_operands,
+    resolve_impl,
+    resolve_out_fmt,
+)
 
 _LANE = 128
 _SUBLANE = 8
 
 
-def _decode_attn_kernel(fmt, impl, S, bs, g, d, scale, *refs):
+def _decode_attn_kernel(fmt, impl, S, bs, g, d, scale, out_fmt, out_impl, nenc, *refs):
+    ndec = 1 if impl == "lut" else 0
+    enc_tabs = refs[ndec : ndec + nenc]
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref = refs[ndec + nenc :]
     if impl == "lut":
-        tab_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref = refs
+        tab_ref = refs[0]
         decode = lambda bits: decode_wire_lut(tab_ref[...], bits)
     else:
-        q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref = refs
         decode = decode_bits_fn(fmt)
 
     s = pl.program_id(2)
@@ -104,14 +114,23 @@ def _decode_attn_kernel(fmt, impl, S, bs, g, d, scale, *refs):
 
     @pl.when(s == pl.num_programs(2) - 1)
     def _flush():
-        o_ref[0, 0] = (acc_ref[...] / l_ref[:, :1]).astype(o_ref.dtype)
+        out = acc_ref[...] / l_ref[:, :1]
+        if out_fmt is not None:
+            # fused epilogue: the attention output leaves VMEM as wire bits
+            # (e.g. straight back into a quantised residual/KV consumer);
+            # padded g/d lanes encode garbage the clipped store drops
+            out = encode_epilogue(out_fmt, out_impl, enc_tabs)(out)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("fmt", "block_s", "interpret", "decode_impl")
+    jax.jit,
+    static_argnames=("fmt", "block_s", "interpret", "decode_impl", "out_fmt",
+                     "encode_impl"),
 )
 def takum_decode_attention(
-    q, k_bits, v_bits, fmt, *, block_s=512, interpret=None, decode_impl=None
+    q, k_bits, v_bits, fmt, *, block_s=512, interpret=None, decode_impl=None,
+    out_fmt=None, encode_impl=None,
 ):
     """One-token decode attention; returns [B, H, d] f32.
 
@@ -119,10 +138,16 @@ def takum_decode_attention(
     (``fmt``: registered name or bare takum width).  S may be any length
     (padded edge tile); d and g = H/Hkv may be arbitrary (zero-padded to
     lane/sublane alignment outside the kernel).
+
+    ``out_fmt`` fuses the output wire encode into the flush epilogue and
+    returns packed [B, H, d] ``out_fmt`` bits instead of f32 — semantics
+    ``encode(attention(...))`` (``ref.fused_decode_attention_ref``), with
+    ``encode_impl`` selecting the epilogue codec strategy.
     """
     interpret = interpret_default() if interpret is None else interpret
     name = wire_format(fmt).name
     impl = resolve_impl(decode_impl, name)
+    out_fmt, out_impl = resolve_out_fmt(out_fmt, encode_impl)
     B, H, d = q.shape
     _, Hkv, S, _ = k_bits.shape
     assert H % Hkv == 0
@@ -142,16 +167,24 @@ def takum_decode_attention(
         pl.BlockSpec((1, 1, bs, dp), lambda b, h, s: (b, h, s, 0)),
     ]
     args = [qg, k_bits, v_bits]
+    enc_tabs = encode_epilogue_operands(out_fmt, out_impl)
+    for t in reversed(enc_tabs):
+        in_specs.insert(0, pl.BlockSpec(t.shape, lambda b, h, s: (0, 0)))
+        args.insert(0, t)
     if impl == "lut":
         tab = decode_table_operand(name)
         in_specs.insert(0, pl.BlockSpec(tab.shape, lambda b, h, s: (0, 0)))
         args.insert(0, tab)
+    out_dtype = jnp.float32 if out_fmt is None else wire_format(out_fmt).storage
     out = pl.pallas_call(
-        functools.partial(_decode_attn_kernel, name, impl, S, bs, g, d, scale),
+        functools.partial(
+            _decode_attn_kernel, name, impl, S, bs, g, d, scale,
+            out_fmt, out_impl, len(enc_tabs),
+        ),
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, gp, dp), lambda b, h, s: (b, h, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, Hkv, g, d), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, g, d), out_dtype),
         scratch_shapes=[
             pltpu.VMEM((gp, _LANE), jnp.float32),
             pltpu.VMEM((gp, _LANE), jnp.float32),

@@ -6,9 +6,10 @@ bf16).  BlockSpec keeps one (block_rows, block_cols) tile of input + output
 in VMEM; the body is either the family's branch-free bit manipulation
 (shared <=12-bit header decoder for takum, paper §I; field unpack for OFP8;
 shift-bitcast for bf16) or the table-driven path (one VMEM gather per
-element for decode, two 256-entry gathers for the 8-bit encodes) feeding
-the VPU — selectable per call via ``decode_impl``/``encode_impl``, LUT
-default for the 8-bit formats.
+element for decode, two gathers for the tabulated encodes — the 8-bit
+exponent-byte pairs or the two-level takum16 scheme) feeding the VPU —
+selectable per call via ``decode_impl``/``encode_impl``, resting on the
+per-op measured winners in ``lut.DEFAULT_DECODE_IMPL``/``DEFAULT_ENCODE_IMPL``.
 
 Arbitrary (R, C) shapes are supported: the grid is cdiv-padded and edge tiles
 need no masking — the codec is element-wise, so garbage padding lanes only
@@ -29,9 +30,9 @@ from .lut import (
     decode_bits_fn,
     decode_table_operand,
     decode_wire_lut,
-    encode8_table_operands,
     encode_bits_fn,
-    encode_wire8_lut,
+    encode_table_operands,
+    encode_wire_lut,
     resolve_impl,
 )
 
@@ -47,8 +48,9 @@ def _decode_kernel(fmt, impl, *refs):
 
 def _encode_kernel(fmt, impl, *refs):
     if impl == "lut":
-        meta_ref, thr_ref, x_ref, o_ref = refs
-        enc = encode_wire8_lut(x_ref[...], meta_ref[...], thr_ref[...], fmt)
+        # table operands lead: (meta, thr) 8-bit / (meta, sub) takum16
+        tabs, (x_ref, o_ref) = refs[:-2], refs[-2:]
+        enc = encode_wire_lut(x_ref[...], tuple(t[...] for t in tabs), fmt)
     else:
         x_ref, o_ref = refs
         enc = encode_bits_fn(fmt)(x_ref[...])
@@ -104,22 +106,17 @@ def takum_encode_2d(
     """[R, C] float32 -> [R, C] packed wire format (uint8/uint16)."""
     interpret = interpret_default() if interpret is None else interpret
     wf = wire_format(fmt)
-    impl = resolve_impl(encode_impl, wf.name)
-    if impl == "lut" and not wf.supports_lut_encode:
-        raise ValueError(
-            f"encode_impl='lut' is only tabulated for 8-bit formats, got {wf.name}"
-        )
+    impl = resolve_impl(encode_impl, wf.name, op="encode")
     R, C = x.shape
     br, bc, grid = _blocks(R, C, block_rows, block_cols)
     in_specs = [pl.BlockSpec((br, bc), lambda i, j: (i, j))]
     args = [x]
     if impl == "lut":
-        meta, thr = encode8_table_operands(wf.name)
+        tabs = encode_table_operands(wf.name)
         in_specs = [
-            pl.BlockSpec(meta.shape, lambda i, j: (0, 0)),
-            pl.BlockSpec(thr.shape, lambda i, j: (0, 0)),
+            pl.BlockSpec(t.shape, lambda i, j: (0, 0)) for t in tabs
         ] + in_specs
-        args = [meta, thr] + args
+        args = list(tabs) + args
     return pl.pallas_call(
         functools.partial(_encode_kernel, wf.name, impl),
         grid=grid,

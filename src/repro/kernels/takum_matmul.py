@@ -21,6 +21,14 @@ store.
 The in-VMEM dequant step is selectable via ``decode_impl``: ``"bits"`` is
 the branch-free integer decode, ``"lut"`` gathers from the precomputed
 VMEM-resident table (default for takum8; see repro.kernels.lut).
+
+``out_fmt`` fuses the *output* wire encode into the flush epilogue: the f32
+accumulator tile is encoded to packed wire bits in-register and the store
+writes uint8/uint16 — producers that feed a quantised consumer (QTensor
+requantise, KV append, grad compression) skip the f32 HBM round-trip a
+standalone codec kernel would need.  The epilogue owns no rounding policy of
+its own: it applies the format's RNE encode to exactly the f32 values the
+unfused kernel would have written (DESIGN.md §6).
 """
 
 from __future__ import annotations
@@ -34,15 +42,25 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.formats import wire_format
 from .common import choose_block, dim_mask, interpret_default
-from .lut import decode_bits_fn, decode_table_operand, decode_wire_lut, resolve_impl
+from .lut import (
+    decode_bits_fn,
+    decode_table_operand,
+    decode_wire_lut,
+    encode_epilogue,
+    encode_epilogue_operands,
+    resolve_impl,
+    resolve_out_fmt,
+)
 
 
-def _mm_kernel(fmt, impl, dual, K, bk, *refs):
+def _mm_kernel(fmt, impl, dual, K, bk, out_fmt, out_impl, nenc, *refs):
+    ndec = 1 if impl == "lut" else 0
+    enc_tabs = refs[ndec : ndec + nenc]
+    x_ref, w_ref, o_ref, acc_ref = refs[ndec + nenc :]
     if impl == "lut":
-        tab_ref, x_ref, w_ref, o_ref, acc_ref = refs
+        tab_ref = refs[0]
         decode = lambda bits: decode_wire_lut(tab_ref[...], bits)
     else:
-        x_ref, w_ref, o_ref, acc_ref = refs
         decode = decode_bits_fn(fmt)
 
     @pl.when(pl.program_id(2) == 0)
@@ -70,10 +88,17 @@ def _mm_kernel(fmt, impl, dual, K, bk, *refs):
 
     @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
     def _flush():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        acc = acc_ref[...]
+        if out_fmt is not None:
+            # fused epilogue: encode the output tile in-register — the wire
+            # bits hit HBM directly, no f32 round-trip for a codec kernel.
+            # M/N padding lanes encode garbage that the clipped store drops
+            # (element-wise, same as the standalone codec kernel's edges).
+            acc = encode_epilogue(out_fmt, out_impl, enc_tabs)(acc)
+        o_ref[...] = acc.astype(o_ref.dtype)
 
 
-def _call(fmt, impl, dual, x, w, out_dtype, bm, bn, bk, interpret):
+def _call(fmt, impl, dual, x, w, out_dtype, out_fmt, out_impl, bm, bn, bk, interpret):
     M, K = x.shape
     K2, N = w.shape
     assert K == K2, (x.shape, w.shape)
@@ -86,12 +111,20 @@ def _call(fmt, impl, dual, x, w, out_dtype, bm, bn, bk, interpret):
         pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
     ]
     args = [x, w]
+    enc_tabs = encode_epilogue_operands(out_fmt, out_impl)
+    for t in reversed(enc_tabs):
+        in_specs.insert(0, pl.BlockSpec(t.shape, lambda i, j, k: (0, 0)))
+        args.insert(0, t)
     if impl == "lut":
         tab = decode_table_operand(fmt)
         in_specs.insert(0, pl.BlockSpec(tab.shape, lambda i, j, k: (0, 0)))
         args.insert(0, tab)
+    if out_fmt is not None:
+        out_dtype = wire_format(out_fmt).storage
     return pl.pallas_call(
-        functools.partial(_mm_kernel, fmt, impl, dual, K, bk),
+        functools.partial(
+            _mm_kernel, fmt, impl, dual, K, bk, out_fmt, out_impl, len(enc_tabs)
+        ),
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
@@ -103,20 +136,32 @@ def _call(fmt, impl, dual, x, w, out_dtype, bm, bn, bk, interpret):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("fmt", "out_dtype", "bm", "bn", "bk", "interpret", "decode_impl"),
+    static_argnames=(
+        "fmt", "out_dtype", "out_fmt", "bm", "bn", "bk", "interpret",
+        "decode_impl", "encode_impl",
+    ),
 )
 def takum_matmul(
-    x, w_bits, fmt, *, out_dtype=jnp.float32, bm=256, bn=256, bk=512,
-    interpret=None, decode_impl=None,
+    x, w_bits, fmt, *, out_dtype=jnp.float32, out_fmt=None, bm=256, bn=256,
+    bk=512, interpret=None, decode_impl=None, encode_impl=None,
 ):
     """x [M,K] f32/bf16 @ decode(w_bits [K,N] wire fmt) -> [M,N] out_dtype.
 
     ``fmt`` is a registered wire-format name or a bare takum width.
+    ``out_fmt`` fuses the wire encode into the kernel epilogue: the output
+    tile is encoded to packed ``out_fmt`` bits in-register before the HBM
+    store (semantics: ``encode(matmul(...))``, see ``ref.fused_matmul_ref``)
+    and the result dtype is the format's storage (``out_dtype`` is ignored).
+    ``encode_impl`` picks the epilogue's codec strategy like ``decode_impl``.
     """
     interpret = interpret_default() if interpret is None else interpret
     name = wire_format(fmt).name
     impl = resolve_impl(decode_impl, name)
-    return _call(name, impl, False, x, w_bits, out_dtype, bm, bn, bk, interpret)
+    out_fmt, out_impl = resolve_out_fmt(out_fmt, encode_impl)
+    return _call(
+        name, impl, False, x, w_bits, out_dtype, out_fmt, out_impl,
+        bm, bn, bk, interpret,
+    )
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
@@ -145,14 +190,26 @@ takum_matmul_ad.defvjp(_takum_matmul_fwd, _takum_matmul_bwd)
 
 @functools.partial(
     jax.jit,
-    static_argnames=("fmt", "out_dtype", "bm", "bn", "bk", "interpret", "decode_impl"),
+    static_argnames=(
+        "fmt", "out_dtype", "out_fmt", "bm", "bn", "bk", "interpret",
+        "decode_impl", "encode_impl",
+    ),
 )
 def takum_dual_matmul(
-    x_bits, w_bits, fmt, *, out_dtype=jnp.float32, bm=256, bn=256, bk=512,
-    interpret=None, decode_impl=None,
+    x_bits, w_bits, fmt, *, out_dtype=jnp.float32, out_fmt=None, bm=256,
+    bn=256, bk=512, interpret=None, decode_impl=None, encode_impl=None,
 ):
-    """decode(x_bits) @ decode(w_bits), both packed wire fmt (VDPPT analogue)."""
+    """decode(x_bits) @ decode(w_bits), both packed wire fmt (VDPPT analogue).
+
+    ``out_fmt`` fuses the output wire encode into the epilogue (see
+    :func:`takum_matmul`) — with ``out_fmt == fmt`` this is the fully
+    bits-in/bits-out requantising GEMM: no f32 ever touches HBM.
+    """
     interpret = interpret_default() if interpret is None else interpret
     name = wire_format(fmt).name
     impl = resolve_impl(decode_impl, name)
-    return _call(name, impl, True, x_bits, w_bits, out_dtype, bm, bn, bk, interpret)
+    out_fmt, out_impl = resolve_out_fmt(out_fmt, encode_impl)
+    return _call(
+        name, impl, True, x_bits, w_bits, out_dtype, out_fmt, out_impl,
+        bm, bn, bk, interpret,
+    )

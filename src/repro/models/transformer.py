@@ -25,9 +25,10 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.takum import takum_decode, takum_encode
+from repro.core.takum import takum_decode
 from repro.dist.actx import constrain
 from repro.core.formats import wire_format
+from repro.kernels.lut import encode_jnp_fast
 from repro.quant.policy import is_takum, takum_width
 from .attention import flash_attention
 from .config import ModelConfig
@@ -335,13 +336,16 @@ class KVCache(NamedTuple):
 
 def _encode_cache(cfg, x):
     """KV entries -> cache storage, per ``quant.kv_cache``: takum/OFP8 pack
-    to wire bits (e4m3 KV caches ride the registry), IEEE stays float."""
+    to wire bits (e4m3 KV caches ride the registry), IEEE stays float.
+
+    The append is encoded *at the producer* — the fast per-format encode
+    (table path for takum, bit-identical to the codec; branch-free packer
+    for OFP8) runs on the fresh K/V projections right where they are
+    computed, instead of a second codec pass over the cache."""
     fmt = cfg.quant.kv_cache
-    if is_takum(fmt):
-        return takum_encode(x.astype(jnp.float32), takum_width(fmt))
     wf = wire_format(fmt)
-    if wf.family == "ofp8":
-        return wf.encode_jnp(x.astype(jnp.float32)).astype(wf.storage)
+    if wf.family in ("takum", "ofp8"):
+        return encode_jnp_fast(x.astype(jnp.float32), wf.name)
     return x.astype(jnp.bfloat16 if fmt == "bf16" else jnp.float32)
 
 

@@ -15,8 +15,9 @@ from typing import Any, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.formats import wire_format
 from repro.quant.policy import is_takum
-from repro.quant.qtensor import QTensor, dequantize, quantize
+from repro.quant.qtensor import QTensor, dequantize, quantize, requantize
 
 
 class AdamWState(NamedTuple):
@@ -25,12 +26,19 @@ class AdamWState(NamedTuple):
     v: Any
 
 
-def _q(x, fmt, key):
+def _q(x, prev, fmt, key):
     if fmt == "f32":
         return x.astype(jnp.float32)
     if fmt == "bf16":
         return x.astype(jnp.bfloat16)
-    return quantize(x, fmt, scaled=True, sr_key=key)
+    # the steady-state moment refresh: quantised moments always come from
+    # adamw_init (QTensor with a scale slot), so re-encode into prev's
+    # structure; a fmt that disagrees with the state fails loudly instead
+    # of being silently overridden by prev's format
+    assert isinstance(prev, QTensor) and prev.fmt == wire_format(fmt).name, (
+        fmt, type(prev).__name__,
+    )
+    return requantize(prev, x, sr_key=key)
 
 
 def _dq(x):
@@ -95,8 +103,8 @@ def adamw_update(
         pf = p.astype(jnp.float32)
         pf = pf - lr * (update + weight_decay * pf)
         new_p.append(pf.astype(p.dtype))
-        new_m.append(_q(mf, fmt, keys[2 * i]))
-        new_v.append(_q(vf, fmt, keys[2 * i + 1]))
+        new_m.append(_q(mf, m, fmt, keys[2 * i]))
+        new_v.append(_q(vf, v, fmt, keys[2 * i + 1]))
 
     return (
         jax.tree.unflatten(treedef, new_p),

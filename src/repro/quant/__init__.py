@@ -1,4 +1,7 @@
 from .policy import QuantPolicy, FORMAT_BITS
-from .qtensor import QTensor, quantize, dequantize
+from .qtensor import QTensor, quantize, dequantize, requantize
 
-__all__ = ["QuantPolicy", "FORMAT_BITS", "QTensor", "quantize", "dequantize"]
+__all__ = [
+    "QuantPolicy", "FORMAT_BITS", "QTensor", "quantize", "dequantize",
+    "requantize",
+]

@@ -22,7 +22,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.formats import wire_format
-from repro.core.takum import takum_decode, takum_encode, takum_encode_sr
+from repro.core.takum import takum_decode, takum_encode_sr
+from repro.kernels.lut import encode_jnp_fast
 from .policy import FORMAT_BITS, takum_width
 
 
@@ -72,12 +73,25 @@ def quantize(x, fmt: str, *, scaled: bool = False, sr_key=None) -> QTensor:
     scale = _pow2_scale(x) if scaled else None
     xs = (x / scale) if scale is not None else x
     xs = xs.astype(jnp.float32)
-    if wf.family == "takum":
-        n = takum_width(fmt)
-        bits = takum_encode_sr(xs, sr_key, n) if sr_key is not None else takum_encode(xs, n)
+    if wf.family == "takum" and sr_key is not None:
+        bits = takum_encode_sr(xs, sr_key, takum_width(fmt))
     else:
-        bits = wf.encode_jnp(xs).astype(wf.storage)
+        # RNE path: the per-format fast encode (table path for takum,
+        # bit-identical to takum_encode; branch-free packer for OFP8) — the
+        # producer-side encode is the hot half of every requantise step
+        bits = encode_jnp_fast(xs, fmt)
     return QTensor(bits, fmt, scale)
+
+
+def requantize(q: QTensor, x, *, sr_key=None) -> QTensor:
+    """Re-encode fresh values into an existing QTensor's format.
+
+    The optimizer-state/weight-refresh path: preserves ``q``'s pytree
+    structure (same format, a per-tensor scale recomputed iff ``q`` carries
+    one — the RMS moves with the values) so the result can replace ``q``
+    leaf-for-leaf inside a jitted step.
+    """
+    return quantize(x, q.fmt, scaled=q.scale is not None, sr_key=sr_key)
 
 
 def dequantize(q: QTensor, dtype=jnp.float32):

@@ -1,0 +1,62 @@
+"""benchmarks.compare: the perf-trajectory regression gate's core logic.
+
+Pure-dict tests (no jax): identity matching across artifact sizes, the
+>threshold throughput gate for full-vs-full, and the smoke exemption.
+"""
+
+import sys
+import os
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.compare import compare  # noqa: E402
+
+
+def _report(smoke=False, enc_melem=1000.0, fmts=("t8", "t16"), elems=1 << 20,
+            schema="bench_kernels/v4"):
+    return {
+        "schema": schema,
+        "smoke": smoke,
+        "encode": [
+            {"op": "encode", "fmt": f, "impl": "lut", "elems": elems,
+             "melem_s": enc_melem}
+            for f in fmts
+        ],
+        "train_step": [
+            {"op": "train_step", "policy": "takum", "arch": "a", "B": 8,
+             "tokens_s": 27000.0}
+        ],
+    }
+
+
+def test_identical_reports_pass():
+    assert compare(_report(), _report(), 0.2) == []
+
+
+def test_regression_beyond_threshold_fails():
+    fails = compare(_report(), _report(enc_melem=700.0), 0.2)
+    assert len(fails) == 2 and all("regression" in f for f in fails)
+
+
+def test_regression_within_threshold_passes():
+    assert compare(_report(), _report(enc_melem=850.0), 0.2) == []
+
+
+def test_smoke_candidate_skips_throughput_but_checks_coverage():
+    # 10x slower but smoke: exempt from the wall-clock gate
+    assert compare(_report(), _report(smoke=True, enc_melem=100.0), 0.2) == []
+    # a dropped format identity still fails, smoke or not
+    fails = compare(_report(), _report(smoke=True, fmts=("t8",)), 0.2)
+    assert len(fails) == 1 and "missing" in fails[0] and "t16" in fails[0]
+
+
+def test_size_fields_do_not_split_identities():
+    # smoke shrinks elems/shapes; the identity must still match
+    assert compare(_report(), _report(smoke=True, elems=1 << 16), 0.2) == []
+
+
+def test_schema_bump_resets_the_trajectory():
+    # a deliberate schema change restructures row identities: no gate —
+    # neither the 10x slowdown nor the dropped rows fail across the bump
+    old = _report(schema="bench_kernels/v3", fmts=("t8",), enc_melem=10_000.0)
+    assert compare(old, _report(), 0.2) == []

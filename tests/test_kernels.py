@@ -267,6 +267,194 @@ def test_wire_decode_attention_vs_ref(fmt):
     np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
 
 
+# ------------------------------------------------- fused encode epilogues
+
+OUT_FMTS = WIRE_FMTS
+
+
+@pytest.mark.parametrize("fmt", WIRE_FMTS)
+@pytest.mark.parametrize("out_fmt", OUT_FMTS)
+def test_matmul_fused_encode_matrix(fmt, out_fmt):
+    """Full in-format x out-format matrix: with a single K tile the fused
+    kernel == encode(matmul_ref) bit-for-bit (the ref.py contract), and in
+    all cases fused == encode(unfused kernel output) exactly — the epilogue
+    adds no rounding of its own."""
+    from repro.kernels import ops
+
+    M, K, N = 36, 60, 40
+    x = jnp.asarray(_rand((M, K), 1.0, seed=11))
+    wb = ref.codec_encode_ref(jnp.asarray(_rand((K, N), 0.2, seed=12)), fmt)
+    fused = np.asarray(
+        takum_matmul(x, wb, fmt, bm=64, bn=128, bk=128, out_fmt=out_fmt)
+    )
+    assert fused.dtype == np.dtype(
+        {8: np.uint8, 16: np.uint16}[ref.wire_format(out_fmt).nbits]
+    )
+    unfused = takum_matmul(x, wb, fmt, bm=64, bn=128, bk=128)
+    np.testing.assert_array_equal(fused, np.asarray(ops.encode(unfused, out_fmt)))
+    want = np.asarray(ref.fused_matmul_ref(x, wb, fmt, out_fmt))
+    np.testing.assert_array_equal(fused, want)  # single K tile: bit-exact
+
+
+@pytest.mark.parametrize("fmt", ("t8", "t16"))
+@pytest.mark.parametrize("out_fmt", OUT_FMTS)
+def test_dual_matmul_fused_encode(fmt, out_fmt):
+    """Bits-in/bits-out requantising GEMM: fused == encode(unfused) exactly,
+    and == encode(ref) bit-for-bit on the single-K-tile grid."""
+    from repro.kernels import ops
+
+    xb = ref.codec_encode_ref(jnp.asarray(_rand((40, 96), 1.0, seed=13)), fmt)
+    wb = ref.codec_encode_ref(jnp.asarray(_rand((96, 36), 0.3, seed=14)), fmt)
+    fused = np.asarray(
+        takum_dual_matmul(xb, wb, fmt, bm=64, bn=128, bk=128, out_fmt=out_fmt)
+    )
+    unfused = takum_dual_matmul(xb, wb, fmt, bm=64, bn=128, bk=128)
+    np.testing.assert_array_equal(fused, np.asarray(ops.encode(unfused, out_fmt)))
+    np.testing.assert_array_equal(
+        fused, np.asarray(ref.fused_dual_matmul_ref(xb, wb, fmt, out_fmt))
+    )
+
+
+@pytest.mark.parametrize("fmt", ("t8", "t16"))
+@pytest.mark.parametrize("out_fmt", OUT_FMTS)
+def test_attention_fused_encode(fmt, out_fmt):
+    """Fused attention epilogue: exactly encode(unfused kernel output) — the
+    online-softmax accumulation order is the kernel's own, so the ref
+    comparison goes through the decoded values (reduction tolerance)."""
+    from repro.kernels import ops
+
+    B, H, Hkv, S, d = 1, 4, 2, 100, 64
+    q = jnp.asarray(_rand((B, H, d), 1.0, seed=15))
+    kb = ref.codec_encode_ref(jnp.asarray(_rand((B, Hkv, S, d), 1.0, seed=16)), fmt)
+    vb = ref.codec_encode_ref(jnp.asarray(_rand((B, Hkv, S, d), 1.0, seed=17)), fmt)
+    fused = np.asarray(
+        takum_decode_attention(q, kb, vb, fmt, block_s=64, out_fmt=out_fmt)
+    )
+    unfused = takum_decode_attention(q, kb, vb, fmt, block_s=64)
+    np.testing.assert_array_equal(fused, np.asarray(ops.encode(unfused, out_fmt)))
+    got = np.asarray(ref.codec_decode_ref(jnp.asarray(fused), out_fmt))
+    want = np.asarray(ref.decode_attention_ref(q, kb, vb, fmt))
+    assert np.all(np.isfinite(got))
+    # value-level sanity: one out_fmt quantisation step (t8 is the coarsest:
+    # <= 2**-4 relative) on top of the kernel's reduction tolerance
+    np.testing.assert_allclose(got, want, rtol=0.1, atol=0.05)
+
+
+@pytest.mark.parametrize("impl", ("bits", "lut"))
+def test_takum16_encode_impls_bit_exact(impl):
+    """takum16 now has both encode impls (the two-level LUT): kernel == ref
+    bit-for-bit on a padded grid for each."""
+    x = _rand((257, 129))
+    enc_r = np.asarray(ref.codec_encode_ref(jnp.asarray(x), 16))
+    enc_k = np.asarray(takum_encode_2d(jnp.asarray(x), 16, encode_impl=impl))
+    np.testing.assert_array_equal(enc_k, enc_r)
+
+
+def test_encode_impl_defaults_are_measured_winners():
+    """The per-op default tables: takum encodes default to the table path,
+    OFP8/bf16 encodes to bits (the bench-measured winners); decode defaults
+    unchanged."""
+    from repro.kernels.lut import resolve_impl
+
+    assert resolve_impl(None, "t8", op="encode") == "lut"
+    assert resolve_impl(None, "t16", op="encode") == "lut"
+    assert resolve_impl(None, "e4m3", op="encode") == "bits"
+    assert resolve_impl(None, "e5m2", op="encode") == "bits"
+    assert resolve_impl(None, "bf16", op="encode") == "bits"
+    assert resolve_impl(None, "t16", op="decode") == "bits"
+    assert resolve_impl(None, "e4m3", op="decode") == "lut"
+    with pytest.raises(ValueError):
+        resolve_impl("lut", "bf16", op="encode")  # untabulated on purpose
+
+
+# ------------------------------------------------- ND codec fast path
+
+
+@pytest.mark.parametrize("fmt", ("t8", "t16"))
+def test_ops_codec_nd_hits_kernel_path(fmt, monkeypatch):
+    """A 3D dist-shaped payload must ride the Pallas kernel (flatten-to-2D),
+    not silently fall back to the jnp reference — the old ndim==2 guard."""
+    from repro.kernels import ops
+
+    x = jnp.asarray(_rand((4, 33, 129), 1.0, seed=18))
+    want_enc = np.asarray(ref.codec_encode_ref(x, fmt))
+    want_dec = np.asarray(ref.codec_decode_ref(jnp.asarray(want_enc), fmt))
+
+    def _boom(*a, **k):  # pragma: no cover - the assertion is the call itself
+        raise AssertionError("ND input fell back to the jnp reference")
+
+    monkeypatch.setattr(ops.ref, "codec_encode_ref", _boom)
+    monkeypatch.setattr(ops.ref, "codec_decode_ref", _boom)
+    enc = ops.encode(x, fmt)
+    assert enc.shape == x.shape
+    np.testing.assert_array_equal(np.asarray(enc), want_enc)
+    dec = ops.decode(enc, fmt)
+    assert dec.shape == x.shape
+    np.testing.assert_array_equal(np.asarray(dec), want_dec)
+
+
+def test_t32_stays_on_the_exact_reference_path():
+    """Wide takums never touch the kernel codecs (whose bodies are only
+    valid for n <= 16): ops.encode/decode fall back to the exact jnp
+    reference for 2D and ND payloads — this was a silent-corruption bug for
+    2D t32 before the guard — and the kernel entry points reject t32."""
+    from repro.kernels import ops
+    from repro.core.takum import takum_encode
+
+    for shape in [(64, 128), (3, 40, 129)]:
+        x = jnp.asarray(_rand(shape, 1.0, seed=20))
+        enc = ops.encode(x, "t32")
+        np.testing.assert_array_equal(
+            np.asarray(enc), np.asarray(takum_encode(x, 32))
+        )
+        np.testing.assert_array_equal(
+            np.asarray(ops.decode(enc, "t32")),
+            np.asarray(ref.codec_decode_ref(enc, "t32")),
+        )
+    with pytest.raises(ValueError, match="<=16-bit"):
+        takum_encode_2d(jnp.zeros((8, 128), jnp.float32), "t32")
+    with pytest.raises(ValueError, match="<=16-bit"):
+        takum_matmul(
+            jnp.zeros((8, 128), jnp.float32),
+            jnp.zeros((128, 8), jnp.uint8), "t8", out_fmt="t32",
+        )
+    # the ops producer dispatch falls back to the exact ref instead
+    xm = jnp.asarray(_rand((10, 60), 1.0, seed=21))
+    wb32 = ops.encode(jnp.asarray(_rand((60, 36), 0.2, seed=22)), "t32")
+    np.testing.assert_array_equal(
+        np.asarray(ops.matmul(xm, wb32, "t32")),
+        np.asarray(ref.takum_matmul_ref(xm, wb32, "t32")),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(ops.matmul(xm, wb32, "t32", out_fmt="t8")),
+        np.asarray(ref.fused_matmul_ref(xm, wb32, "t32", "t8")),
+    )
+
+
+def test_ops_codec_nd_shapes_and_fallbacks():
+    """1D and 5D ride the kernel; 0-d and empty arrays use the reference."""
+    from repro.kernels import ops
+
+    for shape in [(513,), (2, 3, 4, 5, 64)]:
+        x = jnp.asarray(_rand(shape, 1.0, seed=19))
+        enc = ops.encode(x, "t8")
+        assert enc.shape == x.shape
+        np.testing.assert_array_equal(
+            np.asarray(enc), np.asarray(ref.codec_encode_ref(x, "t8"))
+        )
+        np.testing.assert_array_equal(
+            np.asarray(ops.decode(enc, "t8")),
+            np.asarray(ref.codec_decode_ref(enc, "t8")),
+        )
+    scalar = jnp.float32(1.5)
+    np.testing.assert_array_equal(
+        np.asarray(ops.encode(scalar, "t8")),
+        np.asarray(ref.codec_encode_ref(scalar, "t8")),
+    )
+    empty = jnp.zeros((0, 4), jnp.float32)
+    assert ops.encode(empty, "t8").shape == (0, 4)
+
+
 @pytest.mark.parametrize("fmt", ("e4m3", "e5m2"))
 @pytest.mark.parametrize("impl", ("bits", "lut"))
 def test_ofp8_codec_kernel_impls_bit_exact(fmt, impl):

@@ -17,14 +17,21 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import takum_np
-from repro.core.tables import decode_table_bits, decode_table_f32, encode8_tables
+from repro.core.tables import (
+    decode_table_bits,
+    decode_table_f32,
+    encode8_tables,
+    encode16_tables,
+)
 from repro.core.takum import takum_decode_f32bits, takum_encode
 from repro.kernels.common import decode_takum_f32, encode_takum_from_f32
 from repro.kernels.lut import (
     decode_table_operand,
     decode_takum_lut,
     encode8_table_operands,
+    encode_table_operands,
     encode_takum8_lut,
+    encode_takum16_lut,
 )
 
 
@@ -148,6 +155,120 @@ def test_encode8_boundaries_are_9bit_takums():
     # each boundary lies strictly between its neighbouring code values
     for m in range(1, 126):
         assert values[m] < bounds[m] < values[m + 1]
+
+
+# ------------------------------------------------ two-level takum16 encode
+
+
+def test_encode16_tables_structure():
+    """Top level: (base << 8) | r with base the exact code of 2**c; second
+    level: the regime's mantissa shift 23 - (11 - r).  No threshold path
+    exists for takum16 (p >= 4 in every f32-reachable binade)."""
+    meta, sub = encode16_tables()
+    values = takum_np.decode(np.arange(1 << 15, dtype=np.uint64), 16)
+    np.testing.assert_array_equal(sub[:8], 12 + np.arange(8))
+    for e in range(1, 255):
+        c = e - 127
+        base, r = int(meta[e]) >> 8, int(meta[e]) & 0xFF
+        g = (c + 1) if c >= 0 else -c
+        assert r == g.bit_length() - 1, (e, r)
+        assert values[base] == 2.0**c, (e, base)
+
+
+def _t16_probe_bits():
+    """f32 bit patterns at/next to every takum16 rounding boundary, the full
+    decoded-code set, and a dense random sweep — both signs.
+
+    Every f32-reachable boundary (the 17-bit takum ``2m + 1``) carries at
+    most 12 fraction bits, so it is *exactly* f32-representable: the probes
+    hit the RNE ties dead-on, plus one f32 ulp to either side.
+    """
+    bounds = takum_np.decode(
+        2 * np.arange((1 << 15) - 1, dtype=np.uint64) + 1, 17
+    )
+    in_f32 = (bounds >= 2.0**-126) & (bounds < 2.0**128)
+    b32 = bounds[in_f32].astype(np.float32)
+    assert np.array_equal(b32.astype(np.float64), bounds[in_f32])  # exact ties
+    probes = np.concatenate([
+        b32,
+        np.nextafter(b32, np.float32(0)),
+        np.nextafter(b32, np.float32(np.inf)),
+    ])
+    out = [probes.view(np.uint32), np.arange(1 << 16, dtype=np.uint32) << 16]
+    rng = np.random.default_rng(1)
+    out.append(rng.integers(0, 1 << 31, size=200_000, dtype=np.uint32))
+    bits = np.concatenate(out)
+    return np.concatenate([bits, bits | 0x80000000])  # both signs
+
+
+def test_encode16_lut_matches_bit_twiddle_and_oracle():
+    """Exhaustive-tie sweep: the two-level LUT encode == core codec ==
+    kernel bit-twiddle == float64 oracle, boundaries and ulp-neighbours
+    included (DAZ: the f64 oracle sees the flushed-to-zero value)."""
+    bits = _t16_probe_bits()
+    x = jnp.asarray(bits.view(np.float32))
+    meta, sub = encode_table_operands("t16")
+    got = np.asarray(encode_takum16_lut(x, meta, sub))
+    want_core = np.asarray(takum_encode(x, 16))
+    want_kern = np.asarray(encode_takum_from_f32(x, 16))
+    np.testing.assert_array_equal(got, want_core)
+    np.testing.assert_array_equal(want_kern.astype(np.uint16), want_core)
+    # f64 oracle with DAZ pre-applied (f32 subnormals flush before encode)
+    with np.errstate(invalid="ignore"):  # NaN payload casts are well-defined
+        xf = bits.view(np.float32).astype(np.float64)
+        xf = np.where(np.abs(xf) < 2.0**-126, np.copysign(0.0, xf), xf)
+    want_np = takum_np.encode(xf, 16).astype(np.uint16)
+    np.testing.assert_array_equal(got, want_np)
+
+
+def test_encode16_lut_all_codes_roundtrip():
+    """All 65536 takum16 codes: encode(decode(m)) == m wherever decode is
+    injective — the flushed-to-zero tail (|c| < -126) and the saturated tail
+    (c > 127) collapse by design (DAZ / f32 max-finite clamp)."""
+    tab = decode_table_f32(16)
+    meta, sub = encode_table_operands("t16")
+    proj = np.asarray(encode_takum16_lut(jnp.asarray(tab), meta, sub))
+    want = np.asarray(takum_encode(jnp.asarray(tab), 16))
+    np.testing.assert_array_equal(proj, want)  # LUT == codec on every code
+    maxfin = np.float32(3.4028235e38)
+    inj = ~np.isnan(tab) & (tab != 0.0) & (np.abs(tab) < maxfin)
+    codes = np.arange(1 << 16)
+    np.testing.assert_array_equal(proj[inj], codes[inj])
+    assert (~inj).sum() < (1 << 16) // 4  # the vast majority are injective
+
+
+def test_encode16_lut_specials():
+    meta, sub = encode_table_operands("t16")
+    x = jnp.asarray(np.array(
+        [0.0, -0.0, np.inf, -np.inf, np.nan, 1.0, -1.0, 3.4028235e38,
+         2.0**-149, -(2.0**-127)], np.float32
+    ))
+    got = np.asarray(encode_takum16_lut(x, meta, sub))
+    np.testing.assert_array_equal(got[:5], [0, 0, 0x8000, 0x8000, 0x8000])
+    assert got[5] == 0x4000 and got[6] == 0xC000  # +-1 in takum16
+    # f32 maxpos: RNE carries through the c=127 binade top into 2**128's code
+    assert got[7] == np.asarray(takum_encode(x, 16))[7]
+    np.testing.assert_array_equal(got[8:], [0, 0])  # DAZ
+
+
+def test_encode_jnp_fast_t32_uses_exact_codec():
+    """The fast producer encode must not route t32 through the kernel
+    bit-twiddle encoder (only valid for n <= 28): quantize/KV paths keep the
+    exact takum_encode bits, matching the f64 oracle."""
+    from repro.kernels.lut import encode_jnp_fast
+
+    rng = np.random.default_rng(5)
+    bits = rng.integers(0, 1 << 31, size=50_000, dtype=np.uint32)
+    with np.errstate(invalid="ignore"):
+        x = jnp.asarray(bits.view(np.float32))
+    got = np.asarray(encode_jnp_fast(x, "t32"))
+    np.testing.assert_array_equal(got, np.asarray(takum_encode(x, 32)))
+    # and the 8/16-bit fast paths still match the codec after any rewiring
+    for n in (8, 16):
+        np.testing.assert_array_equal(
+            np.asarray(encode_jnp_fast(x, f"t{n}")),
+            np.asarray(takum_encode(x, n)),
+        )
 
 
 # ------------------------------------------- generic (sign-magnitude) tables
