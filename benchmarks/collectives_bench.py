@@ -22,8 +22,8 @@ import time
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results")
 
-PSUM_FMTS = ("f32", "bf16", "t16", "t8", "e4m3", "e5m2")
-PIPE_FMTS = ("t8", "t16", "e4m3", "bf16")
+PSUM_FMTS = ("f32", "bf16", "t16", "t8", "e4m3", "e5m2", "mxe4m3", "mxt8")
+PIPE_FMTS = ("t8", "t16", "e4m3", "bf16", "mxe4m3")
 
 _CHILD = r"""
 import os
@@ -120,7 +120,7 @@ def run(smoke: bool = False):
     }
     pipe_hop = {
         fmt: dict(child_out["pipe_hop"][fmt],
-                  hop_bytes_per_el=wire_format(fmt).nbits // 8)
+                  hop_bytes_per_el=wire_format(fmt).wire_bits_per_el / 8)
         for fmt in PIPE_FMTS
     }
     summary = {

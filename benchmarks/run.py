@@ -80,10 +80,14 @@ def _check_format_dispatch(report: dict) -> None:
     assert not missing_enc, (
         f"registered formats missing from the bench encode matrix: {sorted(missing_enc)}"
     )
-    # probe the real dispatch path (kernel or ref, per backend) per format
+    # probe the real dispatch path (kernel or ref, per backend) per format;
+    # block-scaled formats are probed through their interleaved payload
+    # shape (an all-zero payload has scale byte 0 -> clamped 2^-126 scale
+    # and zero elements, decoding to exact zeros)
     for name in sorted(registered):
         wf = wire_format(name)
-        out = ops.decode(jnp.zeros((8, 128), wf.storage), name)
+        cols = 128 * 33 // 32 if wf.is_block_scaled else 128
+        out = ops.decode(jnp.zeros((8, cols), wf.storage), name)
         assert out.shape == (8, 128) and float(jnp.max(jnp.abs(out))) == 0.0, name
     print(f"bench_format_dispatch,0,{len(registered)} formats reachable "
           f"({','.join(sorted(registered))})")
@@ -98,29 +102,44 @@ def _validate_bench_json(smoke: bool, fold_keys: set) -> None:
                 "attention", "train_step", "decode_speedup_lut_vs_bits",
                 "encode_speedup_lut_vs_bits", "encode_fused_speedup",
                 "hbm_model_bytes_1024x1024",
-                "format_matrix_decode_melem_s", "takum_vs_zoo",
+                "format_matrix_decode_melem_s", "takum_vs_zoo", "takum_vs_mx",
                 } | fold_keys
     missing = required - report.keys()
     assert not missing, f"BENCH_kernels.json missing keys: {sorted(missing)}"
     impls = {(r["fmt"], r["impl"]) for r in report["decode"]}
     assert {("t8", "bits"), ("t8", "lut"), ("t16", "bits"), ("t16", "lut"),
-            ("e4m3", "lut"), ("e5m2", "lut"), ("bf16", "bits")} <= impls, impls
+            ("e4m3", "lut"), ("e5m2", "lut"), ("bf16", "bits"),
+            ("mxe4m3", "lut"), ("mxe4m3", "bits"), ("mxe5m2", "lut"),
+            ("mxt8", "lut"), ("mxt8", "bits")} <= impls, impls
     enc_impls = {(r["fmt"], r["impl"]) for r in report["encode"]}
     assert {("t8", "lut"), ("t16", "lut"), ("t16", "bits"), ("e4m3", "bits"),
-            ("e5m2", "bits"), ("bf16", "bits")} <= enc_impls, enc_impls
+            ("e5m2", "bits"), ("bf16", "bits"), ("mxe4m3", "bits"),
+            ("mxe5m2", "bits"), ("mxt8", "bits"),
+            ("mxt8", "lut")} <= enc_impls, enc_impls
     fused = {(r["fmt"], r["path"]) for r in report["encode_fused"]}
     assert {("t8", "fused"), ("t8", "separate"), ("t16", "fused"),
-            ("t16", "separate")} <= fused, fused
+            ("t16", "separate"), ("mxe4m3", "fused"), ("mxe4m3", "separate"),
+            ("mxt8", "fused"), ("mxt8", "separate")} <= fused, fused
     assert any(not r["aligned"] for r in report["matmul"]), "need non-aligned matmul shapes"
+    mx_mm = {r["fmt"] for r in report["matmul"]}
+    assert {"mxe4m3", "mxe5m2", "mxt8"} <= mx_mm, mx_mm
+    mx_attn = {r["fmt"] for r in report["attention"]}
+    assert {"mxe4m3", "mxe5m2", "mxt8"} <= mx_attn, mx_attn
     if "collectives" in fold_keys:
         red = report["collectives"]["wire_reduction_vs_f32"]
         assert red["t8"] == 4.0 and red["t16"] == 2.0, red
         assert red["e4m3"] == 4.0 and red["e5m2"] == 4.0 and red["bf16"] == 2.0, red
-        assert set(report["collectives"]["pipe_hop"]) >= {"t8", "e4m3"}, (
-            "collectives summary missing compressed pipeline-hop rows"
-        )
+        # the block containers pay the honest scale-byte tax: 32/8.25
+        assert abs(red["mxe4m3"] - 32 / 8.25) < 1e-9, red
+        assert abs(red["mxt8"] - 32 / 8.25) < 1e-9, red
+        assert set(report["collectives"]["pipe_hop"]) >= {
+            "t8", "e4m3", "mxe4m3"
+        }, "collectives summary missing compressed pipeline-hop rows"
     assert any(r["op"] == "decode_attention" for r in report["attention"])
     assert any(r["op"] == "train_step" for r in report["train_step"])
+    assert any(
+        r.get("policy") == "mxfp8" for r in report["train_step"]
+    ), "missing the mxfp8 e2e train-step row"
     _check_format_dispatch(report)
     print(f"bench_json_valid,0,{len(report['decode'])}+{len(report['matmul'])} rows "
           f"+ folds {sorted(fold_keys)}")

@@ -17,6 +17,15 @@ Two registries live here:
   registry instead; :func:`wire_format` resolves names, aliases, bare
   takum widths (8/16/32 — the historical kernel API) and WireFormat
   instances to one canonical entry.
+
+  :class:`BlockScaledFormat` entries (``mxe4m3``/``mxe5m2``/``mxt8``) are
+  OCP-MX-style containers around an 8-bit element format: a shared E8M0
+  power-of-two scale per 32-element block, packed interleaved with the
+  element bytes into one uint8 wire payload (33 bytes per block — see
+  :mod:`repro.quant.blockscale`).  Their ``encode_jnp``/``decode_jnp`` map
+  f32 ``[..., n]`` (n a multiple of 32) <-> payload ``[..., n/32*33]`` —
+  the only registry codecs whose payload shape differs from the value
+  shape, which every consumer handles via ``wf.is_block_scaled``.
 """
 
 from __future__ import annotations
@@ -190,11 +199,77 @@ class WireFormat:
 
     @property
     def supports_sr(self) -> bool:
-        """Stochastic-rounding encode available (takum family only)."""
-        return self.family == "takum"
+        """Stochastic-rounding encode available: takum's bit-string SR
+        (``takum_encode_sr``) and the OFP8 truncate-plus-dither SR
+        (``ofp8.encode_sr`` — OCP defines none; semantics in DESIGN.md §6).
+        """
+        return self.family in ("takum", "ofp8")
+
+    @property
+    def is_block_scaled(self) -> bool:
+        """True for the MX-style block-scaled containers (see subclass)."""
+        return False
+
+    @property
+    def wire_bits_per_el(self) -> float:
+        """Wire bits per payload element — ``nbits`` plus any container
+        overhead (the block-scaled formats add 8 scale bits per 32-block).
+        The quantity byte-accounting surfaces (``QuantPolicy.bytes_per_el``,
+        ``dist.collectives.wire_bytes_per_element``, the roofline memory
+        term) must use instead of raw ``nbits``."""
+        return float(self.nbits)
 
     def __str__(self):  # pragma: no cover - repr convenience
         return f"WireFormat({self.name})"
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class BlockScaledFormat(WireFormat):
+    """MX-style block-scaled container around an 8-bit element wire format.
+
+    ``elem_name`` is the registered element format ('e4m3', 'e5m2', 't8');
+    ``block`` is the OCP MX block size (32); ``elem_emax`` the exponent of
+    the element format's top binade, which the absmax-derived E8M0 scale
+    normalises each block into.  ``nbits``/``storage`` describe the element
+    *bytes*; the true wire cost is :attr:`wire_bits_per_el` (8.25 bits/el).
+    Scale derivation, the all-zero/NaN-block rules, payload layout and the
+    saturating element conversion live in :mod:`repro.quant.blockscale`.
+    """
+
+    elem_name: str = ""
+    block: int = 32
+    elem_emax: int = 0
+
+    @property
+    def elem(self) -> WireFormat:
+        return WIRE_FORMATS[self.elem_name]
+
+    @property
+    def is_block_scaled(self) -> bool:
+        return True
+
+    @property
+    def wire_bits_per_el(self) -> float:
+        return self.nbits + 8.0 / self.block
+
+    @property
+    def supports_lut_decode(self) -> bool:
+        """The payload is not one code space (scale byte + element bytes),
+        but the *element* decode inside the container follows the element
+        format's tabulability — the kernels' decode_impl knob resolves
+        against the element format (repro.kernels.lut.resolve_impl)."""
+        return self.elem.supports_lut_decode
+
+    @property
+    def supports_lut_encode(self) -> bool:
+        return self.elem.supports_lut_encode
+
+    @property
+    def supports_sr(self) -> bool:
+        """No SR in the container: the scale derivation is deterministic and
+        OCP defines RNE element conversion only.  (The flat formats keep
+        their SR encoders for the gradient surfaces.)"""
+        return False
 
 
 def _takum_wire(n: int) -> WireFormat:
@@ -286,6 +361,35 @@ def _f32_wire() -> WireFormat:
     )
 
 
+def _mx_wire(elem_name: str, elem_emax: int) -> BlockScaledFormat:
+    """Register an MX block-scaled container around an 8-bit element format.
+
+    The codec bodies live in :mod:`repro.quant.blockscale` and are imported
+    lazily inside the closures — quant sits above core in the layering, so
+    the registry must not import it at module load.
+    """
+    name = f"mx{elem_name}"
+
+    def _blockscale():
+        from repro.quant import blockscale
+
+        return blockscale
+
+    return BlockScaledFormat(
+        name=name,
+        nbits=8,
+        family="mx",
+        special="nan_block",
+        encode_jnp=lambda x: _blockscale().encode_payload(x, name),
+        decode_jnp=lambda p: _blockscale().decode_payload(p, name),
+        encode_np=lambda x: _blockscale().encode_payload_np(x, name),
+        decode_np=lambda p: _blockscale().decode_payload_np(p, name),
+        elem_name=elem_name,
+        block=32,
+        elem_emax=elem_emax,
+    )
+
+
 WIRE_FORMATS: dict[str, WireFormat] = {
     wf.name: wf
     for wf in [
@@ -296,6 +400,14 @@ WIRE_FORMATS: dict[str, WireFormat] = {
         _takum_wire(32),
         _ofp8_wire("e4m3"),
         _ofp8_wire("e5m2"),
+        # OCP-MX-style block-scaled containers: shared E8M0 scale per
+        # 32-block.  mxe4m3/mxe5m2 are OCP MXFP8; mxt8 is the same container
+        # around takum8 (elem_emax 0 drops each block's absmax into [1, 2),
+        # takum's maximal-precision binade).  e4m3 tops out at 448 = 1.75*2^8
+        # (emax 8), e5m2 at 57344 = 1.75*2^15 (emax 15).
+        _mx_wire("e4m3", 8),
+        _mx_wire("e5m2", 15),
+        _mx_wire("t8", 0),
     ]
 }
 
@@ -312,6 +424,10 @@ WIRE_ALIASES = {
     "bfloat16": "bf16",
     "ofp8_e4m3": "e4m3",
     "ofp8_e5m2": "e5m2",
+    "mxfp8": "mxe4m3",  # the OCP MXFP8 default element format
+    "mxfp8_e4m3": "mxe4m3",
+    "mxfp8_e5m2": "mxe5m2",
+    "mxtakum8": "mxt8",
 }
 
 
@@ -334,8 +450,10 @@ def wire_names() -> tuple[str, ...]:
 
 def kernel_wire_names() -> tuple[str, ...]:
     """Formats the Pallas kernels must be able to dispatch on: every
-    registered narrow (<= 16-bit) wire format.  f32 is the compute dtype,
-    not a packed wire; t32 exceeds the tabulable range."""
+    registered narrow (<= 16-bit) wire format, the block-scaled containers
+    included (their element formats are 8-bit and their payloads are plain
+    uint8 tiles).  f32 is the compute dtype, not a packed wire; t32 exceeds
+    the tabulable range."""
     return tuple(
         name
         for name, wf in WIRE_FORMATS.items()

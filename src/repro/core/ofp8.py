@@ -99,6 +99,88 @@ def encode_jnp(x, fmt: str = "e4m3", saturate: bool = False):
 encode = jax.jit(encode_jnp, static_argnames=("fmt", "saturate"))
 
 
+def encode_sr_jnp(x, rnd_bits, fmt: str = "e4m3"):
+    """Stochastically-rounded f32 -> OFP8 encode (unjitted, kernel-safe).
+
+    OCP defines no SR conversion for OFP8; this is the documented choice
+    (DESIGN.md §6), mirroring ``takum_encode_sr``: *truncate plus uniform
+    dither* — add ``U[0, 2**t)`` (from ``rnd_bits``, uint32) below the ``t``
+    kept-bit boundary of the magnitude bit string, then truncate (round
+    toward zero).  Properties:
+
+    * zero dither reduces to RZ truncation (tested exactly);
+    * between two adjacent codes the round-up probability is exactly the
+      fractional position, so the encode is statistically unbiased where
+      the code grid is locally uniform — including across binade
+      boundaries, because the dither carry walks the magnitude code into
+      the next exponent (consecutive codes), and into the subnormal range,
+      which shares the truncate-and-carry path;
+    * dither past the top finite code follows the format's overflow rule
+      (E4M3 -> NaN, E5M2 -> Inf), like the RNE encode's
+      round-as-if-unbounded-then-replace;
+    * the dither field is 31 bits wide; deeper discards (t > 31) pre-shift
+      the source by t - 31 so the round-up probability stays src/2**t to
+      within the dropped low source bits.  Inputs below the 24-bit
+      subnormal alignment window (|x| < ~2**-30 for E4M3) truncate to
+      zero, forfeiting their < 2**-21 round-up probability (f32-subnormal
+      inputs are DAZ anyway).
+    """
+    spec = SPECS[fmt]
+    eb, mb, bias = spec["ebits"], spec["mbits"], spec["bias"]
+    x = x.astype(jnp.float32)
+    bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    sign = bits >> 31
+    absbits = bits & _U(0x7FFFFFFF)
+
+    is_nan = jnp.isnan(x)
+    is_inf = jnp.isinf(x)
+
+    e = (absbits >> 23).astype(jnp.int32) - 127
+    e_t = e + bias
+    m23 = absbits & _U(0x7FFFFF)
+    full = m23 | _U(1 << 23)
+
+    extra = jnp.clip(1 - e_t, 0, 24)
+    t = (23 - mb) + extra
+    src = jnp.where(extra > 0, full, m23)
+    # t can exceed the 31-bit dither field (deep below the subnormals):
+    # pre-shift the source so (src' + U[0, 2**31)) >> 31 keeps the round-up
+    # probability at src/2**t — clipping the shift alone would inflate it
+    # by 2**(t-31), an upward bias of up to ~8e6x on tiny gradients
+    over = jnp.clip(t - 31, 0, 31).astype(_U)
+    src = src >> over
+    tc = jnp.clip(t, 1, 31).astype(_U)
+    # truncate + dither: kept = (src + U[0, 2**t)) >> t — the only change
+    # vs the RNE tail (src <= 2**24 and dither < 2**31: no uint32 overflow)
+    dither = rnd_bits.astype(_U) & ((_U(1) << tc) - _U(1))
+    kept = (src + dither) >> tc
+    # past the subnormal alignment window the src scale itself is clipped
+    # (extra caps at 24): truncate those to zero per the documented choice
+    kept = jnp.where(1 - e_t > 24, _U(0), kept)
+
+    e_sub = jnp.where(extra > 0, 0, e_t)
+    mag = (jnp.maximum(e_sub, 0).astype(_U) << mb) + kept
+    mag = jnp.where(absbits == 0, _U(0), mag)
+    mag = jnp.where(e < -126, _U(0), mag)  # DAZ: f32 subnormal inputs
+
+    max_mag_finite = _U(0x7E) if fmt == "e4m3" else _U(0x7B)
+    nan_mag = _U(0x7F)
+    inf_mag = _U(0x7C) if spec["has_inf"] else nan_mag
+    overflow = mag > max_mag_finite
+    mag = jnp.where(overflow, inf_mag if spec["has_inf"] else nan_mag, mag)
+    mag = jnp.where(is_inf, inf_mag, mag)
+    mag = jnp.where(is_nan, nan_mag, mag)
+    return ((sign << 7) | mag).astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt",))
+def encode_sr(x, key, fmt: str = "e4m3"):
+    """Stochastically-rounded OFP8 encode (for gradient/optimizer surfaces):
+    draws the uniform dither from ``key`` and calls :func:`encode_sr_jnp`."""
+    rnd = jax.random.bits(key, shape=jnp.shape(x), dtype=jnp.uint32)
+    return encode_sr_jnp(x, rnd, fmt)
+
+
 def decode_jnp(bits, fmt: str = "e4m3"):
     """8-bit OFP8 patterns -> float32 (unjitted body, kernel-safe)."""
     spec = SPECS[fmt]

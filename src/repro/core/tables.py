@@ -105,6 +105,11 @@ def _decode_table_bits_by_name(name: str) -> np.ndarray:
     from .formats import wire_format
 
     wf = wire_format(name)
+    if wf.is_block_scaled:
+        raise ValueError(
+            f"decode table for {name!r}: block-scaled payloads are not one "
+            f"code space — tabulate the element format {wf.elem_name!r}"
+        )
     if not wf.supports_lut_decode:
         raise ValueError(f"decode table for {name!r}: 2**{wf.nbits} entries untabulable")
     # first use may be inside a jit trace (kernels build their table operand
@@ -346,6 +351,11 @@ def encode_tables(fmt):
     """The format's LUT-encode table tuple: (meta, thr) for 8-bit formats,
     (meta, sub) for takum16 — matching :func:`repro.kernels.lut.encode_wire_lut`."""
     wf = _wire(fmt)
+    if wf.is_block_scaled:
+        raise ValueError(
+            f"no encode tables for {wf.name!r}: the container tabulates its "
+            f"element format {wf.elem_name!r} (repro.kernels.lut resolves this)"
+        )
     if not wf.supports_lut_encode:
         raise ValueError(f"no encode tables for {wf.name!r} ({wf.nbits}b)")
     return encode8_tables(fmt) if wf.nbits == 8 else encode16_tables(fmt)

@@ -37,9 +37,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import ofp8
 from repro.core.formats import wire_format
 from repro.core.takum import takum_encode_sr
 from repro.kernels.lut import decode_jnp_fast, encode_jnp_fast
+from repro.quant import blockscale
 
 IS_STUB = False
 
@@ -48,11 +50,16 @@ def wire_codec(fmt, *, sr_key=None):
     """(encode, decode) pair moving f32 payloads through wire format ``fmt``.
 
     ``encode`` maps f32 -> the wire payload (packed uint bits, or bf16 for
-    the bf16 wire); ``decode`` maps a payload back to f32 (a single gather
-    from the format's exact decode LUT for the packed formats).  ``sr_key``
-    switches the takum encode to stochastic rounding; the IEEE/OFP8
-    families only define RNE, so it is ignored there.  Shared by the
-    compressed psum ring, error feedback and the pipeline stage hops.
+    the bf16 wire; for the block-scaled mx* formats the interleaved
+    scale+bits payload — last dim n -> n/32*33, n a 32-multiple — so the
+    E8M0 scales and element bytes cross the ring as one message); ``decode``
+    maps a payload back to f32.  ``sr_key`` switches the takum/OFP8 encode
+    to stochastic rounding (takum: bit-string SR; OFP8: the
+    truncate-plus-dither encoder — DESIGN.md §6); bf16 defines RNE only and
+    the block containers derive their scales deterministically, so it is
+    ignored there.  Shared by the compressed psum ring, error feedback and
+    the pipeline stage hops — all of which pad/slice the last axis around
+    this codec for block formats (``blockscale.pad_block``).
     """
     wf = wire_format(fmt)
     if wf.name == "f32":
@@ -62,6 +69,14 @@ def wire_codec(fmt, *, sr_key=None):
             lambda v: v.astype(jnp.bfloat16),
             lambda m: m.astype(jnp.float32),
         )
+    if wf.is_block_scaled:
+        # scale bytes + element bytes in one interleaved uint8 payload:
+        # decode(encode(x)) is a codec fixed point here too (the conformance
+        # suite's idempotence property), so the ring never re-encodes
+        return (
+            lambda v: encode_jnp_fast(v, wf.name),
+            lambda m: decode_jnp_fast(m, wf.name),
+        )
     if not wf.supports_lut_decode:
         raise ValueError(
             f"compressed wire format {wf.name!r} unsupported: the LUT decode "
@@ -69,6 +84,8 @@ def wire_codec(fmt, *, sr_key=None):
         )
     if wf.family == "takum" and sr_key is not None:
         encode = lambda v: takum_encode_sr(v, sr_key, wf.nbits)
+    elif wf.family == "ofp8" and sr_key is not None:
+        encode = lambda v: ofp8.encode_sr(v, sr_key, wf.name)
     else:
         # producer-side fast encode: the per-format measured winner (table
         # path for takum — bit-identical to takum_encode — short bit-twiddle
@@ -142,10 +159,18 @@ def compressed_psum(x, axis_name, fmt="t8", *, exact_local: bool = True,
     N = axis_size(axis_name)
     if N == 1:
         return xf
+    n = xf.shape[-1] if xf.ndim else 1
+    if wf.is_block_scaled:
+        # the block codec moves whole 32-blocks: zero-pad the last axis in,
+        # slice back out (zero padding never perturbs a block's scale)
+        xf = blockscale.pad_block(jnp.atleast_1d(xf))
     encode, decode = wire_codec(wf.name, sr_key=sr_key)
     wire = encode(xf)
     own = xf if exact_local else decode(wire)
-    return _ring_reduce(wire, own, axis_name, decode, N, canonical_order)
+    out = _ring_reduce(wire, own, axis_name, decode, N, canonical_order)
+    if wf.is_block_scaled:
+        out = out[..., :n].reshape(jnp.shape(x))
+    return out
 
 
 def compressed_pmean(x, axis_name, fmt="t8", *, exact_local: bool = False,
@@ -159,11 +184,14 @@ def compressed_pmean(x, axis_name, fmt="t8", *, exact_local: bool = False,
     ) / N
 
 
-def wire_bytes_per_element(fmt, pods: int) -> int:
+def wire_bytes_per_element(fmt, pods: int) -> float:
     """Bytes per payload element crossing the wire on a ``pods``-wide ring.
 
     A P-ring all-reduce sends P-1 full-payload messages per device; each
-    element travels as a ``fmt`` bit pattern.  f32 -> t16/bf16 halves this,
-    f32 -> t8/e4m3/e5m2 quarters it, independent of P.
+    element travels as a ``fmt`` bit pattern *plus its share of any
+    container overhead* — the block-scaled formats add one E8M0 scale byte
+    per 32-block, i.e. 8.25 bits/element (``WireFormat.wire_bits_per_el``).
+    f32 -> t16/bf16 halves the wire, f32 -> t8/e4m3/e5m2 quarters it, and
+    f32 -> mx* is a 3.88x cut, independent of P.
     """
-    return (pods - 1) * (wire_format(fmt).nbits // 8)
+    return (pods - 1) * wire_format(fmt).wire_bits_per_el / 8

@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.formats import wire_format
+from repro.quant import blockscale
 
 from .collectives import _ring_reduce, axis_size, wire_codec
 
@@ -50,15 +51,26 @@ def ef_compressed_psum(g, err, axis_name, fmt="t8"):
     ``fmt`` is any registered lossy wire format (f32 would make the
     residuals identically zero and is rejected by :func:`wire_codec`).
     """
-    encode, decode = wire_codec(wire_format(fmt).name)
+    wf = wire_format(fmt)
+    encode, decode = wire_codec(wf.name)
     N = axis_size(axis_name)
 
     def one(gl, el):
         c = gl.astype(jnp.float32) + el
+        n = c.shape[-1] if c.ndim else 1
+        if wf.is_block_scaled:
+            # block codec moves whole 32-blocks; the zero padding carries
+            # zero residual (it encodes and decodes exactly), so the EF
+            # telescoping is untouched by the pad/slice
+            c = blockscale.pad_block(jnp.atleast_1d(c))
         bits = encode(c)
         q = decode(bits)
         new_err = c - q
         reduced = q if N == 1 else _ring_reduce(bits, q, axis_name, decode, N)
+        if wf.is_block_scaled:
+            shape = jnp.shape(gl)
+            reduced = reduced[..., :n].reshape(shape)
+            new_err = new_err[..., :n].reshape(shape)
         return reduced, new_err
 
     flat_g, treedef = jax.tree.flatten(g)

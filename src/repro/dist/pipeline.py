@@ -46,8 +46,9 @@ def pipeline_apply(stage_fn, stage_params, x, *, mesh, axis: str = "pipe",
       mesh: mesh containing ``axis``; its other axes are untouched.
       axis: mesh axis name the stages are laid out over.
       wire_fmt: None/"f32" for exact f32 stage hops, or any registered
-        <=16-bit wire format ('t8', 't16', 'e4m3', 'e5m2', 'bf16') to
-        compress the inter-stage activation traffic (QuantPolicy.pipe_act).
+        <=16-bit wire format ('t8', 't16', 'e4m3', 'e5m2', 'bf16', or a
+        block-scaled 'mxe4m3'/'mxe5m2'/'mxt8' container) to compress the
+        inter-stage activation traffic (QuantPolicy.pipe_act).
 
     Returns the output of the final stage for every microbatch, replicated
     over ``axis`` — shape ``[M, microbatch, ...]``.
@@ -56,17 +57,27 @@ def pipeline_apply(stage_fn, stage_params, x, *, mesh, axis: str = "pipe",
 
     if wire_fmt is not None and wire_format(wire_fmt).name != "f32":
         from repro.core.tables import decode_table_f32
+        from repro.quant import blockscale
         from .collectives import wire_codec
 
-        name = wire_format(wire_fmt).name
-        if wire_format(name).supports_lut_decode and name != "bf16":
+        wf = wire_format(wire_fmt)
+        name = wf.name
+        if wf.supports_lut_decode and name != "bf16":
             # build the decode LUT *here*, outside the shard_map body: an
             # eager shard_map trace cannot host the table construction
             # (ensure_compile_time_eval only escapes jit traces).  The
             # encode side needs no such care: wire_codec's fast encode
             # tables are numpy-built (repro.core.tables), trace-safe.
-            decode_table_f32(name)
+            # (Block-scaled formats tabulate their element format.)
+            decode_table_f32(wf.elem_name if wf.is_block_scaled else name)
         hop_encode, hop_decode = wire_codec(name)
+        if wf.is_block_scaled:
+            # block codec: zero-pad the hop's last axis to a 32-multiple on
+            # send, slice back on arrival (stages preserve shapes, so the
+            # logical hop width is x's trailing dim)
+            enc0, dec0 = hop_encode, hop_decode
+            hop_encode = lambda v: enc0(blockscale.pad_block(v))
+            hop_decode = lambda m, _n=x.shape[-1]: dec0(m)[..., :_n]
     else:
         hop_encode = hop_decode = None
 

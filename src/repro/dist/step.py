@@ -75,7 +75,9 @@ def make_train_step(cfg, mesh, *, lr=3e-4, aux_weight: float = 0.01,
 
     if pod:
         fmt = cfg.quant.grad_comm
-        wire_sr = cfg.quant.stochastic_rounding and is_takum(fmt)
+        # SR now covers OFP8 too (truncate-plus-dither, DESIGN.md §6);
+        # bf16 and the block-scaled containers stay RNE
+        wire_sr = cfg.quant.stochastic_rounding and wire_format(fmt).supports_sr
 
         def fwd_bwd_local(batch_axes):
             def f(params, batch, wire_key):

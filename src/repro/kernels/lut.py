@@ -32,6 +32,7 @@ from repro.core.tables import (
     encode_tables,
     ofp8_overflow_code,
 )
+from repro.quant import blockscale
 from .common import decode_takum_f32, encode_takum_from_f32
 
 _U = jnp.uint32
@@ -75,9 +76,16 @@ def resolve_impl(impl: str | None, fmt, op: str = "decode") -> str:
     ``op`` selects the default table ("decode" or "encode") and the
     tabulability check — decode tables exist for every <=16-bit format,
     encode tables for the 8-bit formats and takum16.
+
+    Block-scaled formats resolve against their *element* format: the impl
+    knob selects the element codec inside the container (the E8M0 scale
+    path is the same handful of integer ops either way), so e.g. mxt8
+    defaults to the takum8 LUTs and mxe4m3 decode to the e4m3 LUT.
     """
     assert op in ("decode", "encode"), op
     wf = wire_format(fmt)
+    if wf.is_block_scaled:
+        return resolve_impl(impl, wf.elem_name, op)
     if wf.family == "takum" and wf.nbits > 16:
         # the kernel codec bodies are only valid for narrow takums (the
         # branch-free encode needs rounding shift 28 + r - n >= 0, the f32
@@ -105,8 +113,16 @@ def decode_bits_fn(fmt):
     Takum keeps the dedicated bit-assembly decoder in :mod:`.common`
     (bit-identical to the LUT by construction); the other families use the
     registry's unjitted ``decode_jnp`` (pure jnp ops, pallas-traceable).
+    Block-scaled formats wrap the *element* decode with the payload
+    unpack + E8M0 scale multiply (see :func:`wire_decode_fn` for the
+    kernel-facing closure that also covers the LUT impl).
     """
     wf = wire_format(fmt)
+    if wf.is_block_scaled:
+        elem_dec = decode_bits_fn(wf.elem_name)
+        return lambda payload: blockscale.decode_payload(
+            payload, wf, elem_decode=elem_dec
+        )
     if wf.family == "takum":
         return lambda bits: decode_takum_f32(bits, wf.nbits)
     return wf.decode_jnp
@@ -115,14 +131,43 @@ def decode_bits_fn(fmt):
 def encode_bits_fn(fmt):
     """The format's kernel-safe branch-free encode: float32 -> uint bits."""
     wf = wire_format(fmt)
+    if wf.is_block_scaled:
+        elem_enc = encode_bits_fn(wf.elem_name)
+        return lambda x: blockscale.encode_payload(x, wf, elem_encode=elem_enc)
     if wf.family == "takum":
         return lambda x: encode_takum_from_f32(x, wf.nbits)
     return wf.encode_jnp
 
 
+def wire_decode_fn(fmt, impl, tab_ref=None):
+    """The tile-decode closure a kernel body applies to its VMEM input tile.
+
+    ``impl == "lut"`` gathers from ``tab_ref`` (the decode-table operand ref
+    for the format — the *element* format's table for block-scaled
+    containers); ``"bits"`` is the branch-free family decode.  For
+    block-scaled formats the closure consumes an interleaved payload tile
+    ``[..., nb*33]`` — the scale bytes ride in the same VMEM block — and
+    emits ``[..., nb*32]`` f32.
+    """
+    if impl == "lut":
+        inner = lambda bits: decode_wire_lut(tab_ref[...], bits)
+    else:
+        inner = None
+    wf = wire_format(fmt)
+    if wf.is_block_scaled:
+        elem_dec = inner if inner is not None else decode_bits_fn(wf.elem_name)
+        return lambda payload: blockscale.decode_payload(
+            payload, wf, elem_decode=elem_dec
+        )
+    return inner if inner is not None else decode_bits_fn(wf.name)
+
+
 def decode_table_operand(fmt):
-    """The format's decode table as a 2D f32 operand, lanes-major."""
-    return jnp.asarray(decode_table_f32(fmt)).reshape(-1, 128)
+    """The format's decode table as a 2D f32 operand, lanes-major (the
+    element format's table for block-scaled containers)."""
+    wf = wire_format(fmt)
+    name = wf.elem_name if wf.is_block_scaled else wf.name
+    return jnp.asarray(decode_table_f32(name)).reshape(-1, 128)
 
 
 def encode8_table_operands(fmt="t8"):
@@ -133,8 +178,11 @@ def encode8_table_operands(fmt="t8"):
 def encode_table_operands(fmt):
     """The format's LUT-encode tables as a tuple of 2D lanes-major operands:
     (meta, thr) for the 8-bit formats, (meta, sub) for takum16 — consumed
-    positionally by :func:`encode_wire_lut`."""
-    return tuple(jnp.asarray(t).reshape(-1, 128) for t in encode_tables(fmt))
+    positionally by :func:`encode_wire_lut`.  Block-scaled containers use
+    their element format's tables."""
+    wf = wire_format(fmt)
+    name = wf.elem_name if wf.is_block_scaled else wf.name
+    return tuple(jnp.asarray(t).reshape(-1, 128) for t in encode_tables(name))
 
 
 def decode_wire_lut(tab, bits):
@@ -310,7 +358,22 @@ def encode_epilogue(out_fmt, out_impl, enc_tab_refs):
     epilogue encodes exactly the f32 values the unfused kernel would have
     written, so fused == encode(unfused) bit-for-bit).  Returns f32 tile ->
     uint code tile; ``enc_tab_refs`` are the LUT operand refs (empty for the
-    bits impl)."""
+    bits impl).  For a block-scaled ``out_fmt`` the epilogue derives the
+    per-32-block E8M0 scales from the accumulator tile and stores the
+    interleaved payload — the tile's N/d extent must be a multiple of 32 so
+    blocks never straddle tiles, which keeps per-tile encode identical to
+    whole-array encode (tiles are 128-aligned, so this always holds)."""
+    wf = wire_format(out_fmt)
+    if wf.is_block_scaled:
+        if out_impl == "lut":
+            elem_enc = lambda v: encode_wire_lut(
+                v, tuple(t[...] for t in enc_tab_refs), wf.elem_name
+            )
+        else:
+            elem_enc = encode_bits_fn(wf.elem_name)
+        # the cap-clip inside block_quantize runs before elem_enc, so the
+        # non-saturating LUT/bit element encoders are exact here
+        return lambda acc: blockscale.encode_payload(acc, wf, elem_encode=elem_enc)
     if out_impl == "lut":
         return lambda acc: encode_wire_lut(
             acc, tuple(t[...] for t in enc_tab_refs), out_fmt
@@ -323,6 +386,41 @@ def encode_epilogue_operands(out_fmt, out_impl):
     if out_fmt is not None and out_impl == "lut":
         return encode_table_operands(out_fmt)
     return ()
+
+
+def jnp_decode_fn(fmt, impl=None):
+    """A trace-safe jnp decode closure honouring the impl knob — the
+    outside-kernels sibling of :func:`wire_decode_fn` (tables captured as
+    jnp constants, so build it *outside* any traced region; inside traces
+    use :func:`decode_jnp_fast`, which re-wraps per call).  Used by the
+    bench harness to A/B both impls for every format, block-scaled included.
+    """
+    wf = wire_format(fmt)
+    impl = resolve_impl(impl, wf.name)
+    if impl == "bits":
+        return decode_bits_fn(wf.name)
+    tab = jnp.asarray(
+        decode_table_f32(wf.elem_name if wf.is_block_scaled else wf.name)
+    )
+    inner = lambda b: decode_wire_lut(tab, b)
+    if wf.is_block_scaled:
+        return lambda p: blockscale.decode_payload(p, wf, elem_decode=inner)
+    return inner
+
+
+def jnp_encode_fn(fmt, impl=None):
+    """Trace-safe jnp encode closure honouring the impl knob (see
+    :func:`jnp_decode_fn` for the capture caveat)."""
+    wf = wire_format(fmt)
+    impl = resolve_impl(impl, wf.name, op="encode")
+    if impl == "bits":
+        return encode_bits_fn(wf.name)
+    if wf.is_block_scaled:
+        tabs = encode_table_operands(wf.name)
+        inner = lambda v: encode_wire_lut(v, tabs, wf.elem_name)
+        return lambda x: blockscale.encode_payload(x, wf, elem_encode=inner)
+    tabs = encode_table_operands(wf.name)
+    return lambda x: encode_wire_lut(x, tabs, wf.name)
 
 
 # ---------------------------------------------------------------------------
@@ -345,6 +443,13 @@ def encode_jnp_fast(x, fmt):
     """
     wf = wire_format(fmt)
     xf = x.astype(jnp.float32)
+    if wf.is_block_scaled:
+        # the container around the element format's own measured winner;
+        # block_quantize cap-clips before the element encode, so the
+        # non-saturating fast encoders are exact here
+        return blockscale.encode_payload(
+            xf, wf, elem_encode=lambda v: encode_jnp_fast(v, wf.elem_name)
+        )
     # supports_lut_encode first: wide takums must not reach resolve_impl
     # (which rejects them for the kernel paths) — they short-circuit to the
     # registry codec below
@@ -365,6 +470,10 @@ def decode_jnp_fast(bits, fmt):
     :func:`encode_jnp_fast`.
     """
     wf = wire_format(fmt)
+    if wf.is_block_scaled:
+        return blockscale.decode_payload(
+            bits, wf, elem_decode=lambda b: decode_jnp_fast(b, wf.elem_name)
+        )
     if wf.supports_lut_decode and wf.name != "bf16":
         return decode_wire_lut(jnp.asarray(decode_table_f32(wf.name)), bits)
     if wf.family == "takum" and wf.nbits > 28:

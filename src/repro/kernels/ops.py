@@ -87,7 +87,9 @@ def _kernel_fmt_ok(name: str) -> bool:
     excluded — the kernel codec bodies only cover n <= 16 (``resolve_impl``
     rejects them loudly) — and stay on the jnp reference, which is exact
     for every registered width.  This also fixes the pre-PR silent
-    corruption of 2D t32 payloads."""
+    corruption of 2D t32 payloads.  The block-scaled containers are
+    first-class: their element codecs are the same 8-bit bodies and the
+    payload ride-along is a reshape + scale multiply."""
     wf = wire_format(name)
     return not (wf.family == "takum" and wf.nbits > 16)
 
@@ -99,8 +101,18 @@ def _kernelable(x, name: str) -> bool:
     )
 
 
+def _reshape_back(out, shape):
+    """Undo the flatten-to-2D, keeping the codec's (possibly payload-width)
+    last axis — for block-scaled formats ``encode`` grows and ``decode``
+    shrinks the last dim by the 33/32 payload factor."""
+    return out if shape is None else out.reshape(shape[:-1] + out.shape[-1:])
+
+
 def encode(x, fmt, encode_impl=None):
-    """float32 [...] -> packed wire-format bits (same shape).
+    """float32 [...] -> packed wire-format bits (same shape; block-scaled
+    formats return the interleaved payload, last dim n -> n/32*33, and
+    require the last dim to be a multiple of 32 — callers that own the
+    logical shape pad, see quant.blockscale.pad_block).
 
     Any rank >= 1 rides the Pallas codec kernel via the flatten-to-2D fast
     path; 0-d/empty inputs, wide takums (t32) and ``use_kernels(False)``
@@ -110,7 +122,7 @@ def encode(x, fmt, encode_impl=None):
     if _kernelable(x, name):
         x2, shape = _as_2d(x)
         out = takum_encode_2d(x2, name, encode_impl=encode_impl)
-        return out if shape is None else out.reshape(shape)
+        return _reshape_back(out, shape)
     return ref.codec_encode_ref(x, name)
 
 
@@ -119,7 +131,7 @@ def decode(bits, fmt, decode_impl=None):
     if _kernelable(bits, name):
         b2, shape = _as_2d(bits)
         out = takum_decode_2d(b2, name, decode_impl=decode_impl)
-        return out if shape is None else out.reshape(shape)
+        return _reshape_back(out, shape)
     return ref.codec_decode_ref(bits, name)
 
 

@@ -78,13 +78,20 @@ def fused_decode_attention_ref(q, k_bits, v_bits, fmt, out_fmt):
 def decode_attention_ref(q, k_bits, v_bits, fmt, *, scale=None):
     """Single-token decode attention against a wire-format-quantised KV cache.
 
-    q: [B, H, d] f32;  k_bits/v_bits: [B, Hkv, S, d] packed wire bits.
+    q: [B, H, d] f32;  k_bits/v_bits: [B, Hkv, S, d] packed wire bits (for
+    block-scaled formats the last axis is the interleaved payload, d/32*33).
     GQA: H is a multiple of Hkv, query head h uses kv head h // (H // Hkv).
     Returns [B, H, d] f32.
     """
     B, H, d = q.shape
     Bk, Hkv, S, dk = k_bits.shape
-    assert (B, d) == (Bk, dk) and H % Hkv == 0
+    wf = wire_format(fmt)
+    if wf.is_block_scaled:
+        from repro.quant import blockscale
+
+        assert (B, blockscale.payload_len(d)) == (Bk, dk) and H % Hkv == 0
+    else:
+        assert (B, d) == (Bk, dk) and H % Hkv == 0
     g = H // Hkv
     k = codec_decode_ref(k_bits, fmt)  # [B, Hkv, S, d]
     v = codec_decode_ref(v_bits, fmt)

@@ -38,15 +38,15 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.formats import wire_format
+from repro.quant import blockscale
 from .common import choose_block, dim_mask, interpret_default, round_up
 from .lut import (
-    decode_bits_fn,
     decode_table_operand,
-    decode_wire_lut,
     encode_epilogue,
     encode_epilogue_operands,
     resolve_impl,
     resolve_out_fmt,
+    wire_decode_fn,
 )
 
 _LANE = 128
@@ -57,11 +57,9 @@ def _decode_attn_kernel(fmt, impl, S, bs, g, d, scale, out_fmt, out_impl, nenc, 
     ndec = 1 if impl == "lut" else 0
     enc_tabs = refs[ndec : ndec + nenc]
     q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref = refs[ndec + nenc :]
-    if impl == "lut":
-        tab_ref = refs[0]
-        decode = lambda bits: decode_wire_lut(tab_ref[...], bits)
-    else:
-        decode = decode_bits_fn(fmt)
+    decode = wire_decode_fn(fmt, impl, refs[0] if impl == "lut" else None)
+    mx = wire_format(fmt).is_block_scaled
+    out_mx = out_fmt is not None and wire_format(out_fmt).is_block_scaled
 
     s = pl.program_id(2)
 
@@ -81,17 +79,23 @@ def _decode_attn_kernel(fmt, impl, S, bs, g, d, scale, out_fmt, out_impl, nenc, 
         # padded d lanes: q cols -> 0.0, K/V cols -> bits 0 -> decode 0.0,
         # so every contraction only gains exact-zero terms
         q = jnp.where(dim_mask(q.shape, 1, d, dp, 0), q, 0.0)
-    kb = k_ref[0, 0]  # [bs, dp] packed bits
+    kb = k_ref[0, 0]  # [bs, dp] packed bits / [bs, d/32*33] payload
     vb = v_ref[0, 0]
-    if dp != d:
+    if not mx and dp != d:
         kb = jnp.where(dim_mask(kb.shape, 1, d, dp, 0), kb, 0)
         vb = jnp.where(dim_mask(vb.shape, 1, d, dp, 0), vb, 0)
     if S % bs:
-        # padded V rows -> bits 0 -> decode 0.0 (their weight is 0 below, but
-        # 0 * garbage-NaN would still poison the accumulator)
+        # padded V rows -> bits/payload 0 -> decode 0.0 (their weight is 0
+        # below, but 0 * garbage-NaN would still poison the accumulator)
         vb = jnp.where(dim_mask(vb.shape, 0, S, bs, s), vb, 0)
-    k = decode(kb)  # [bs, dp]
+    k = decode(kb)  # [bs, dp] (block-scaled: [bs, d], zero-padded below)
     v = decode(vb)
+    if mx and dp != d:
+        # the payload tile is exactly d wide in element units; re-pad the
+        # decoded K/V to the lane-aligned dp with exact zeros to match q
+        pad = [(0, 0), (0, dp - d)]
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
 
     logits = jax.lax.dot_general(
         q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
@@ -118,8 +122,14 @@ def _decode_attn_kernel(fmt, impl, S, bs, g, d, scale, out_fmt, out_impl, nenc, 
         if out_fmt is not None:
             # fused epilogue: the attention output leaves VMEM as wire bits
             # (e.g. straight back into a quantised residual/KV consumer);
-            # padded g/d lanes encode garbage the clipped store drops
-            out = encode_epilogue(out_fmt, out_impl, enc_tabs)(out)
+            # padded g/d lanes encode garbage the clipped store drops.  A
+            # block-scaled out_fmt first drops the padded d lanes (their
+            # exact zeros would otherwise join real 32-blocks and, worse,
+            # widen the payload past the store) and emits [gp, d/32*33].
+            if out_mx:
+                out = encode_epilogue(out_fmt, out_impl, enc_tabs)(out[:, :d])
+            else:
+                out = encode_epilogue(out_fmt, out_impl, enc_tabs)(out)
         o_ref[0, 0] = out.astype(o_ref.dtype)
 
 
@@ -145,26 +155,43 @@ def takum_decode_attention(
     ``encode_impl`` selecting the epilogue codec strategy.
     """
     interpret = interpret_default() if interpret is None else interpret
-    name = wire_format(fmt).name
+    wf = wire_format(fmt)
+    name = wf.name
     impl = resolve_impl(decode_impl, name)
     out_fmt, out_impl = resolve_out_fmt(out_fmt, encode_impl)
+    out_mx = out_fmt is not None and wire_format(out_fmt).is_block_scaled
     B, H, d = q.shape
-    _, Hkv, S, _ = k_bits.shape
+    _, Hkv, S, dk = k_bits.shape
     assert H % Hkv == 0
     g = H // Hkv
+    if wf.is_block_scaled:
+        # KV tiles are interleaved payloads: the scale bytes ride in the
+        # same VMEM block as their 32 element bytes (blocked along d)
+        if d % blockscale.BLOCK:
+            raise ValueError(
+                f"block-scaled KV cache needs a 32-multiple head dim, got {d}"
+            )
+        assert dk == blockscale.payload_len(d), (d, dk)
+    else:
+        assert dk == d, (d, dk)
+    if out_mx and d % blockscale.BLOCK:
+        raise ValueError(
+            f"block-scaled out_fmt needs a 32-multiple head dim, got {d}"
+        )
     bs = choose_block(S, block_s, _SUBLANE)
     scale = float(d) ** -0.5  # true head dim: padding adds exact-zero terms
 
     qg = q.reshape(B, Hkv, g, d)
     dp, gp = round_up(d, _LANE), round_up(g, _SUBLANE)
+    dkv = dk if wf.is_block_scaled else dp
 
     grid = (B, Hkv, pl.cdiv(S, bs))
     # blocks are tile-aligned covers of (g, d); edge lanes are masked inside
     # the kernel and the packed KV cache streams through uncopied
     in_specs = [
         pl.BlockSpec((1, 1, gp, dp), lambda b, h, s: (b, h, 0, 0)),
-        pl.BlockSpec((1, 1, bs, dp), lambda b, h, s: (b, h, s, 0)),
-        pl.BlockSpec((1, 1, bs, dp), lambda b, h, s: (b, h, s, 0)),
+        pl.BlockSpec((1, 1, bs, dkv), lambda b, h, s: (b, h, s, 0)),
+        pl.BlockSpec((1, 1, bs, dkv), lambda b, h, s: (b, h, s, 0)),
     ]
     args = [qg, k_bits, v_bits]
     enc_tabs = encode_epilogue_operands(out_fmt, out_impl)
@@ -176,6 +203,7 @@ def takum_decode_attention(
         in_specs.insert(0, pl.BlockSpec(tab.shape, lambda b, h, s: (0, 0)))
         args.insert(0, tab)
     out_dtype = jnp.float32 if out_fmt is None else wire_format(out_fmt).storage
+    d_out = blockscale.payload_len(d) if out_mx else d
     out = pl.pallas_call(
         functools.partial(
             _decode_attn_kernel, name, impl, S, bs, g, d, scale,
@@ -183,8 +211,10 @@ def takum_decode_attention(
         ),
         grid=grid,
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, 1, gp, dp), lambda b, h, s: (b, h, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, Hkv, g, d), out_dtype),
+        out_specs=pl.BlockSpec(
+            (1, 1, gp, d_out if out_mx else dp), lambda b, h, s: (b, h, 0, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, g, d_out), out_dtype),
         scratch_shapes=[
             pltpu.VMEM((gp, _LANE), jnp.float32),
             pltpu.VMEM((gp, _LANE), jnp.float32),
@@ -192,4 +222,4 @@ def takum_decode_attention(
         ],
         interpret=interpret,
     )(*args)
-    return out.reshape(B, H, d)
+    return out.reshape(B, H, d_out)

@@ -2,18 +2,30 @@
 
 Element-wise codec over 2D tiles for any registered
 :class:`~repro.core.formats.WireFormat` (t8/t16 takum, OFP8 E4M3/E5M2,
-bf16).  BlockSpec keeps one (block_rows, block_cols) tile of input + output
-in VMEM; the body is either the family's branch-free bit manipulation
-(shared <=12-bit header decoder for takum, paper §I; field unpack for OFP8;
-shift-bitcast for bf16) or the table-driven path (one VMEM gather per
-element for decode, two gathers for the tabulated encodes — the 8-bit
-exponent-byte pairs or the two-level takum16 scheme) feeding the VPU —
-selectable per call via ``decode_impl``/``encode_impl``, resting on the
-per-op measured winners in ``lut.DEFAULT_DECODE_IMPL``/``DEFAULT_ENCODE_IMPL``.
+bf16, and the block-scaled mx* containers).  BlockSpec keeps one
+(block_rows, block_cols) tile of input + output in VMEM; the body is either
+the family's branch-free bit manipulation (shared <=12-bit header decoder
+for takum, paper §I; field unpack for OFP8; shift-bitcast for bf16) or the
+table-driven path (one VMEM gather per element for decode, two gathers for
+the tabulated encodes — the 8-bit exponent-byte pairs or the two-level
+takum16 scheme) feeding the VPU — selectable per call via
+``decode_impl``/``encode_impl``, resting on the per-op measured winners in
+``lut.DEFAULT_DECODE_IMPL``/``DEFAULT_ENCODE_IMPL``.
 
-Arbitrary (R, C) shapes are supported: the grid is cdiv-padded and edge tiles
-need no masking — the codec is element-wise, so garbage padding lanes only
-produce garbage outputs that the clipped store drops.
+Block-scaled formats move *interleaved payloads*: 33 uint8 bytes per
+32-element block (scale byte + element bytes, :mod:`repro.quant.blockscale`),
+so the payload axis is 33/32 the element axis.  Tiles stay block-aligned
+(column blocks are 128-multiples, blocks are 32 wide) and the impl knob
+selects the *element* codec inside the container; the E8M0 scale ride-along
+is the same few integer ops either way.  The element axis must be a
+multiple of 32 — callers that own the logical shape pad (QTensor, the
+collectives); ``kernels.ops`` falls back to the jnp reference and raises
+the same alignment error there.
+
+Arbitrary (R, C) shapes are supported: the grid is cdiv-padded and edge
+tiles need no masking — the codec is element-wise (block-scaled: per
+whole-block), so garbage padding lanes only produce garbage outputs that
+the clipped store drops.
 """
 
 from __future__ import annotations
@@ -25,42 +37,45 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.formats import wire_format
+from repro.quant import blockscale
 from .common import choose_block, interpret_default
 from .lut import (
-    decode_bits_fn,
     decode_table_operand,
-    decode_wire_lut,
-    encode_bits_fn,
+    encode_epilogue,
     encode_table_operands,
-    encode_wire_lut,
     resolve_impl,
+    wire_decode_fn,
 )
 
 
 def _decode_kernel(fmt, impl, *refs):
     if impl == "lut":
         tab_ref, b_ref, o_ref = refs
-        o_ref[...] = decode_wire_lut(tab_ref[...], b_ref[...])
+        decode = wire_decode_fn(fmt, impl, tab_ref)
     else:
         b_ref, o_ref = refs
-        o_ref[...] = decode_bits_fn(fmt)(b_ref[...])
+        decode = wire_decode_fn(fmt, impl)
+    o_ref[...] = decode(b_ref[...])
 
 
 def _encode_kernel(fmt, impl, *refs):
-    if impl == "lut":
-        # table operands lead: (meta, thr) 8-bit / (meta, sub) takum16
-        tabs, (x_ref, o_ref) = refs[:-2], refs[-2:]
-        enc = encode_wire_lut(x_ref[...], tuple(t[...] for t in tabs), fmt)
-    else:
-        x_ref, o_ref = refs
-        enc = encode_bits_fn(fmt)(x_ref[...])
-    o_ref[...] = enc.astype(o_ref.dtype)
+    # table operands lead: (meta, thr) 8-bit / (meta, sub) takum16; the
+    # encode closure is the shared fused-epilogue tail (lut.encode_epilogue),
+    # which also covers the block-scaled payload assembly
+    tabs, (x_ref, o_ref) = refs[:-2], refs[-2:]
+    enc = encode_epilogue(fmt, impl, tabs)
+    o_ref[...] = enc(x_ref[...]).astype(o_ref.dtype)
 
 
 def _blocks(R, C, block_rows, block_cols):
     br = choose_block(R, block_rows, 8)
     bc = choose_block(C, block_cols, 128)
     return br, bc, (pl.cdiv(R, br), pl.cdiv(C, bc))
+
+
+#: element-tile width -> payload-tile width (tiles are 32-aligned, so the
+#: shared helper's pad-to-block is a no-op here)
+_payload_cols = blockscale.payload_len
 
 
 @functools.partial(
@@ -73,14 +88,19 @@ def takum_decode_2d(
     """[R, C] packed wire format -> [R, C] float32.
 
     ``fmt`` is a registered wire-format name or a bare takum width
-    (8 -> t8, 16 -> t16; the historical API).
+    (8 -> t8, 16 -> t16; the historical API).  For block-scaled formats the
+    input is the interleaved payload [R, C/32*33] and C is recovered from
+    the payload width.
     """
     interpret = interpret_default() if interpret is None else interpret
-    name = wire_format(fmt).name
+    wf = wire_format(fmt)
+    name = wf.name
     impl = resolve_impl(decode_impl, name)
-    R, C = bits.shape
+    R, L = bits.shape
+    C = blockscale.elems_len(L) if wf.is_block_scaled else L
     br, bc, grid = _blocks(R, C, block_rows, block_cols)
-    in_specs = [pl.BlockSpec((br, bc), lambda i, j: (i, j))]
+    in_bc = _payload_cols(bc) if wf.is_block_scaled else bc
+    in_specs = [pl.BlockSpec((br, in_bc), lambda i, j: (i, j))]
     args = [bits]
     if impl == "lut":
         tab = decode_table_operand(name)
@@ -103,11 +123,17 @@ def takum_decode_2d(
 def takum_encode_2d(
     x, fmt, *, block_rows=256, block_cols=512, interpret=None, encode_impl=None
 ):
-    """[R, C] float32 -> [R, C] packed wire format (uint8/uint16)."""
+    """[R, C] float32 -> [R, C] packed wire format (uint8/uint16); for
+    block-scaled formats the output is the interleaved payload
+    [R, C/32*33] and C must be a multiple of 32."""
     interpret = interpret_default() if interpret is None else interpret
     wf = wire_format(fmt)
     impl = resolve_impl(encode_impl, wf.name, op="encode")
     R, C = x.shape
+    if wf.is_block_scaled and C % blockscale.BLOCK:
+        raise ValueError(
+            f"block-scaled encode needs a 32-multiple column count, got {C}"
+        )
     br, bc, grid = _blocks(R, C, block_rows, block_cols)
     in_specs = [pl.BlockSpec((br, bc), lambda i, j: (i, j))]
     args = [x]
@@ -117,11 +143,15 @@ def takum_encode_2d(
             pl.BlockSpec(t.shape, lambda i, j: (0, 0)) for t in tabs
         ] + in_specs
         args = list(tabs) + args
+    if wf.is_block_scaled:
+        out_bc, out_cols = _payload_cols(bc), _payload_cols(C)
+    else:
+        out_bc, out_cols = bc, C
     return pl.pallas_call(
         functools.partial(_encode_kernel, wf.name, impl),
         grid=grid,
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((R, C), wf.storage),
+        out_specs=pl.BlockSpec((br, out_bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((R, out_cols), wf.storage),
         interpret=interpret,
     )(*args)

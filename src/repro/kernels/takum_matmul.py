@@ -41,15 +41,15 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.formats import wire_format
+from repro.quant import blockscale
 from .common import choose_block, dim_mask, interpret_default
 from .lut import (
-    decode_bits_fn,
     decode_table_operand,
-    decode_wire_lut,
     encode_epilogue,
     encode_epilogue_operands,
     resolve_impl,
     resolve_out_fmt,
+    wire_decode_fn,
 )
 
 
@@ -57,11 +57,8 @@ def _mm_kernel(fmt, impl, dual, K, bk, out_fmt, out_impl, nenc, *refs):
     ndec = 1 if impl == "lut" else 0
     enc_tabs = refs[ndec : ndec + nenc]
     x_ref, w_ref, o_ref, acc_ref = refs[ndec + nenc :]
-    if impl == "lut":
-        tab_ref = refs[0]
-        decode = lambda bits: decode_wire_lut(tab_ref[...], bits)
-    else:
-        decode = decode_bits_fn(fmt)
+    decode = wire_decode_fn(fmt, impl, refs[0] if impl == "lut" else None)
+    mx = wire_format(fmt).is_block_scaled
 
     @pl.when(pl.program_id(2) == 0)
     def _init():
@@ -70,14 +67,24 @@ def _mm_kernel(fmt, impl, dual, K, bk, out_fmt, out_impl, nenc, *refs):
     kid = pl.program_id(2)
     wb = w_ref[...]
     if K % bk:
+        # w's K axis is raw rows even for block-scaled formats (blocking is
+        # along N); masking payload rows to 0 decodes to exact zeros
         wb = jnp.where(dim_mask(wb.shape, 0, K, bk, kid), wb, 0)
-    w = decode(wb)  # VMEM dequant: uint -> f32
+    w = decode(wb)  # VMEM dequant: uint/payload -> f32
 
     if dual:
         xb = x_ref[...]
-        if K % bk:
-            xb = jnp.where(dim_mask(xb.shape, 1, K, bk, kid), xb, 0)
-        x = decode(xb)
+        if mx:
+            # x's K axis *is* the blocked payload axis: decode first, mask
+            # the decoded elements (garbage edge blocks may decode NaN —
+            # the element-unit mask replaces them with exact zeros)
+            x = decode(xb)
+            if K % bk:
+                x = jnp.where(dim_mask(x.shape, 1, K, bk, kid), x, 0.0)
+        else:
+            if K % bk:
+                xb = jnp.where(dim_mask(xb.shape, 1, K, bk, kid), xb, 0)
+            x = decode(xb)
     else:
         x = x_ref[...]
         if K % bk:
@@ -98,17 +105,31 @@ def _mm_kernel(fmt, impl, dual, K, bk, out_fmt, out_impl, nenc, *refs):
         o_ref[...] = acc.astype(o_ref.dtype)
 
 
+_pc = blockscale.payload_len  # element-tile width -> payload-tile width
+
+
 def _call(fmt, impl, dual, x, w, out_dtype, out_fmt, out_impl, bm, bn, bk, interpret):
-    M, K = x.shape
-    K2, N = w.shape
+    mx = wire_format(fmt).is_block_scaled
+    out_mx = out_fmt is not None and wire_format(out_fmt).is_block_scaled
+    if dual and mx:
+        # x is an interleaved payload blocked along its last axis (= K)
+        M, K = x.shape[0], blockscale.elems_len(x.shape[1])
+    else:
+        M, K = x.shape
+    # w is blocked along its last axis (= N); its K axis is raw rows
+    K2, N = w.shape[0], (blockscale.elems_len(w.shape[1]) if mx else w.shape[1])
     assert K == K2, (x.shape, w.shape)
+    if out_mx and N % blockscale.BLOCK:
+        raise ValueError(
+            f"block-scaled out_fmt needs a 32-multiple N, got {N}"
+        )
     bm = choose_block(M, bm, 8)
     bn = choose_block(N, bn, 128)
     bk = choose_block(K, bk, 128)
     grid = (pl.cdiv(M, bm), pl.cdiv(N, bn), pl.cdiv(K, bk))
     in_specs = [
-        pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
-        pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        pl.BlockSpec((bm, _pc(bk) if dual and mx else bk), lambda i, j, k: (i, k)),
+        pl.BlockSpec((bk, _pc(bn) if mx else bn), lambda i, j, k: (k, j)),
     ]
     args = [x, w]
     enc_tabs = encode_epilogue_operands(out_fmt, out_impl)
@@ -121,14 +142,15 @@ def _call(fmt, impl, dual, x, w, out_dtype, out_fmt, out_impl, bm, bn, bk, inter
         args.insert(0, tab)
     if out_fmt is not None:
         out_dtype = wire_format(out_fmt).storage
+    out_bn, out_n = (_pc(bn), _pc(N)) if out_mx else (bn, N)
     return pl.pallas_call(
         functools.partial(
             _mm_kernel, fmt, impl, dual, K, bk, out_fmt, out_impl, len(enc_tabs)
         ),
         grid=grid,
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        out_specs=pl.BlockSpec((bm, out_bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, out_n), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(*args)
@@ -170,7 +192,14 @@ def takum_matmul_ad(x, w_bits, fmt):
     propagates to x only (``dx = g @ decode(w).T``, itself a dequant-matmul on
     the bit-transposed weights).  Quantised weights receive no cotangent —
     they are storage; master parameters are updated by the optimizer and
-    re-encoded (see repro.quant)."""
+    re-encoded (see repro.quant).  Block-scaled formats are rejected: an
+    interleaved payload has no bit-transpose (the scale bytes are bound to
+    last-axis blocks) — mx weights dequantize at the use site instead."""
+    if wire_format(fmt).is_block_scaled:
+        raise ValueError(
+            "takum_matmul_ad: block-scaled weights have no bit-transposed "
+            "backward payload; dequantize mx weights at the use site"
+        )
     return takum_matmul(x, w_bits, fmt)
 
 

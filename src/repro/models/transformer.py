@@ -336,7 +336,9 @@ class KVCache(NamedTuple):
 
 def _encode_cache(cfg, x):
     """KV entries -> cache storage, per ``quant.kv_cache``: takum/OFP8 pack
-    to wire bits (e4m3 KV caches ride the registry), IEEE stays float.
+    to wire bits (e4m3 KV caches ride the registry), the block-scaled mx*
+    formats pack to the interleaved scale+bits payload (head dim zero-padded
+    to a 32-multiple; the payload axis is hd/32*33 bytes), IEEE stays float.
 
     The append is encoded *at the producer* — the fast per-format encode
     (table path for takum, bit-identical to the codec; branch-free packer
@@ -344,16 +346,29 @@ def _encode_cache(cfg, x):
     computed, instead of a second codec pass over the cache."""
     fmt = cfg.quant.kv_cache
     wf = wire_format(fmt)
+    if wf.is_block_scaled:
+        from repro.quant import blockscale
+
+        return encode_jnp_fast(
+            blockscale.pad_block(x.astype(jnp.float32)), wf.name
+        )
     if wf.family in ("takum", "ofp8"):
         return encode_jnp_fast(x.astype(jnp.float32), wf.name)
     return x.astype(jnp.bfloat16 if fmt == "bf16" else jnp.float32)
 
 
-def _decode_cache(cfg, bits):
+def _decode_cache(cfg, bits, hd: int | None = None):
+    """Cache storage -> f32.  ``hd`` is the logical head dim, needed to
+    slice the zero padding off a block-scaled payload."""
     fmt = cfg.quant.kv_cache
+    wf = wire_format(fmt)
+    if wf.is_block_scaled:
+        from repro.kernels.lut import decode_jnp_fast
+
+        out = decode_jnp_fast(bits, wf.name)
+        return out if hd is None else out[..., :hd]
     if is_takum(fmt):
         return takum_decode(bits, takum_width(fmt))
-    wf = wire_format(fmt)
     if wf.family == "ofp8":
         return wf.decode_jnp(bits)
     return bits.astype(jnp.float32)
@@ -362,9 +377,20 @@ def _decode_cache(cfg, bits):
 def _cache_dtype(cfg):
     fmt = cfg.quant.kv_cache
     wf = wire_format(fmt)
-    if is_takum(fmt) or wf.family == "ofp8":
+    if is_takum(fmt) or wf.family == "ofp8" or wf.is_block_scaled:
         return wf.storage
     return jnp.bfloat16 if fmt == "bf16" else jnp.float32
+
+
+def _cache_feat(cfg, hd: int) -> int:
+    """Stored feature width of one KV entry: the head dim, or the
+    interleaved-payload width for a block-scaled cache format."""
+    wf = wire_format(cfg.quant.kv_cache)
+    if wf.is_block_scaled:
+        from repro.quant import blockscale
+
+        return blockscale.payload_len(hd)
+    return hd
 
 
 def init_cache(cfg: ModelConfig, B: int, S: int) -> KVCache:
@@ -378,7 +404,7 @@ def init_cache(cfg: ModelConfig, B: int, S: int) -> KVCache:
     if cfg.family == "ssm":
         k = v = jnp.zeros((L, B, 0, 1, 1), _cache_dtype(cfg))
     else:
-        k = v = jnp.zeros((L, B, S, Kv, hd), _cache_dtype(cfg))
+        k = v = jnp.zeros((L, B, S, Kv, _cache_feat(cfg, hd)), _cache_dtype(cfg))
     return KVCache(k=k, v=v, pos=jnp.int32(0), conv=conv, ssm=ssm)
 
 
@@ -437,8 +463,8 @@ def decode_step(cfg: ModelConfig, params, token, cache: KVCache, media=None):
         v_layer = lax.dynamic_update_slice(v_layer, _encode_cache(cfg, v_new), (0, pos, 0, 0))
         k_layer = constrain(k_layer, "B", "M", None, None)
         v_layer = constrain(v_layer, "B", "M", None, None)
-        kf = _decode_cache(cfg, k_layer)  # [B, S, Kv, hd] f32
-        vf = _decode_cache(cfg, v_layer)
+        kf = _decode_cache(cfg, k_layer, hd)  # [B, S, Kv, hd] f32
+        vf = _decode_cache(cfg, v_layer, hd)
         S = kf.shape[1]
         kpos = jnp.arange(S)
         valid = kpos <= pos

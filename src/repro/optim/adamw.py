@@ -16,7 +16,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.formats import wire_format
-from repro.quant.policy import is_takum
 from repro.quant.qtensor import QTensor, dequantize, quantize, requantize
 
 
@@ -87,7 +86,8 @@ def adamw_update(
     leaves_v = treedef.flatten_up_to(state.v)
     leaves_p = treedef.flatten_up_to(params)
 
-    use_sr = key is not None and is_takum(fmt)
+    # takum and OFP8 moments re-encode stochastically (bf16/mx* stay RNE)
+    use_sr = key is not None and wire_format(fmt).supports_sr
     keys = (
         jax.random.split(key, 2 * len(leaves_g))
         if use_sr

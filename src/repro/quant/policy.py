@@ -14,17 +14,21 @@ each surface in the training/serving stack and assigns it a format:
     pipe_act     f32 / bf16              t16 / t8 (pipeline stage hops)
 
 Valid format names are exactly the :mod:`repro.core.formats` wire registry
-('f32', 'bf16', 't8'/'t16'/'t32' linear takum, OFP8 'e4m3'/'e5m2') — mixed
-IEEE/takum policies like ``kv_cache='e4m3', grad_comm='e5m2'`` are first
-class, which is what lets the status-quo side of the paper's head-to-head
-run end-to-end instead of as a numpy round-trip.  ``FORMAT_BITS`` is
-derived from that registry (no parallel hand-maintained dict);
-``is_takum``/``takum_width`` remain as thin registry queries for the many
-call sites that branch on the takum family.
+('f32', 'bf16', 't8'/'t16'/'t32' linear takum, OFP8 'e4m3'/'e5m2', and the
+block-scaled MX containers 'mxe4m3'/'mxe5m2'/'mxt8') — mixed policies like
+``kv_cache='e4m3', grad_comm='e5m2'`` are first class, which is what lets
+the status-quo side of the paper's head-to-head run end-to-end instead of
+as a numpy round-trip.  ``FORMAT_BITS`` is derived from that registry (no
+parallel hand-maintained dict) and carries the *wire* bits per element —
+for the block-scaled formats that includes the shared-scale overhead
+(8.25, not 8), so every byte-accounting surface charges the container
+honestly.  ``is_takum``/``takum_width`` remain as thin registry queries
+for the many call sites that branch on the takum family.
 
 The *paper-faithful baseline* in EXPERIMENTS.md §Perf is the bf16 policy
-(status quo); the OFP8 policy is the AVX10.2 FP8 zoo; the takum policies
-are the technique under study.
+(status quo); the OFP8 policy is the AVX10.2 FP8 zoo; the MXFP8 policy is
+the OCP Microscaling evolution of that zoo; the takum policies are the
+technique under study.
 """
 
 from __future__ import annotations
@@ -33,8 +37,9 @@ import dataclasses
 
 from repro.core.formats import WIRE_FORMATS, wire_format
 
-#: format name -> width in bits, derived from the core wire registry
-FORMAT_BITS = {name: wf.nbits for name, wf in WIRE_FORMATS.items()}
+#: format name -> wire bits per element, derived from the core registry
+#: (block-scaled entries are fractional: element bits + scale-byte share)
+FORMAT_BITS = {name: wf.wire_bits_per_el for name, wf in WIRE_FORMATS.items()}
 
 
 def is_takum(fmt: str) -> bool:
@@ -80,6 +85,11 @@ BF16_BASELINE = QuantPolicy()  # the AVX10.2-status-quo analogue
 OFP8_BASELINE = QuantPolicy(  # the AVX10.2 FP8 zoo the paper replaces
     weights="bf16", kv_cache="e4m3", grad_comm="e5m2", pipe_act="e4m3"
 )
+MXFP8_BASELINE = QuantPolicy(  # the OCP Microscaling evolution of the zoo:
+    # same surfaces as the ofp8 policy, every 8-bit wire wrapped in the
+    # per-32-block E8M0 scale container (what the MX head-to-head measures)
+    weights="bf16", kv_cache="mxe4m3", grad_comm="mxe5m2", pipe_act="mxe4m3"
+)
 TAKUM_UNIFORM = QuantPolicy(
     weights="t16", kv_cache="t8", grad_comm="t16", opt_state="t16",
     checkpoint="t16", pipe_act="t16",
@@ -91,6 +101,7 @@ TAKUM_AGGRESSIVE = QuantPolicy(
 POLICIES = {
     "bf16": BF16_BASELINE,
     "ofp8": OFP8_BASELINE,
+    "mxfp8": MXFP8_BASELINE,
     "takum": TAKUM_UNIFORM,
     "takum8": TAKUM_AGGRESSIVE,
 }

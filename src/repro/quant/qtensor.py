@@ -21,18 +21,36 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import ofp8
 from repro.core.formats import wire_format
 from repro.core.takum import takum_decode, takum_encode_sr
-from repro.kernels.lut import encode_jnp_fast
+from . import blockscale
 from .policy import FORMAT_BITS, takum_width
+
+
+def _lut():
+    # deferred: repro.kernels.lut imports repro.quant.blockscale, which runs
+    # this package's __init__ — a module-level import here would close an
+    # import cycle whenever kernels.lut loads first
+    from repro.kernels import lut
+
+    return lut
 
 
 @jax.tree_util.register_pytree_node_class
 @dataclass
 class QTensor:
+    """For the flat formats ``bits`` is the packed pattern array (logical
+    shape) and ``scale`` an optional per-tensor power-of-two f32 scalar.
+    For the block-scaled formats ('mxe4m3'/'mxe5m2'/'mxt8') ``bits`` holds
+    the *element* bytes at the logical shape and ``scale`` the per-32-block
+    E8M0 scale bytes ``[..., ceil(n/32)]`` — stored unpacked so ``shape``
+    stays the logical tensor shape for sharding; :meth:`wire_payload`
+    interleaves them into the single wire/kernel payload."""
+
     bits: Any  # packed patterns (uint8/16/32) or raw array for ieee formats
-    fmt: str  # any registered wire format: 'f32' | 'bf16' | 't*' | 'e4m3' | 'e5m2'
-    scale: Optional[Any] = None  # power-of-two scalar (f32) or None
+    fmt: str  # any registered wire format: 'f32' | 'bf16' | 't*' | 'e4m3' | 'mx*'
+    scale: Optional[Any] = None  # pow2 f32 scalar | E8M0 uint8 blocks | None
 
     def tree_flatten(self):
         return (self.bits, self.scale), self.fmt
@@ -52,6 +70,15 @@ class QTensor:
     def dequantize(self, dtype=jnp.float32):
         return dequantize(self, dtype)
 
+    def wire_payload(self):
+        """The single interleaved uint8 wire payload (block formats only):
+        element bytes zero-padded to a 32-multiple, scale bytes riding next
+        to their blocks — the shape the kernels and compressed collectives
+        move (``[..., ceil(n/32)*33]``)."""
+        wf = wire_format(self.fmt)
+        assert wf.is_block_scaled, self.fmt
+        return blockscale.pack_payload(self.scale, blockscale.pad_block(self.bits))
+
 
 def _pow2_scale(x):
     """Nearest power-of-two to RMS(x): exactly invertible scaling."""
@@ -62,24 +89,38 @@ def _pow2_scale(x):
 
 
 def quantize(x, fmt: str, *, scaled: bool = False, sr_key=None) -> QTensor:
-    """Quantise x into ``fmt``.  ``sr_key`` switches takum RNE -> stochastic
-    (ignored for the IEEE/OFP8 families, which only define RNE)."""
+    """Quantise x into ``fmt``.  ``sr_key`` switches the takum/OFP8 RNE
+    encode to stochastic rounding (ignored for the IEEE and block-scaled
+    formats — bf16 defines RNE only, and the MX containers derive their
+    scales deterministically).
+
+    Block-scaled formats ignore ``scaled`` too: the per-32-block E8M0 scale
+    *is* the scaling (absmax-derived per block, strictly finer than the
+    per-tensor pow2-RMS rescale it replaces)."""
     wf = wire_format(fmt)
     fmt = wf.name
     if fmt == "f32":
         return QTensor(x.astype(jnp.float32), fmt)
     if fmt == "bf16":
         return QTensor(x.astype(jnp.bfloat16), fmt)
+    if wf.is_block_scaled:
+        n = x.shape[-1]
+        scales, bits = blockscale.block_quantize(
+            blockscale.pad_block(x.astype(jnp.float32)), wf
+        )
+        return QTensor(bits[..., :n], fmt, scales)
     scale = _pow2_scale(x) if scaled else None
     xs = (x / scale) if scale is not None else x
     xs = xs.astype(jnp.float32)
     if wf.family == "takum" and sr_key is not None:
         bits = takum_encode_sr(xs, sr_key, takum_width(fmt))
+    elif wf.family == "ofp8" and sr_key is not None:
+        bits = ofp8.encode_sr(xs, sr_key, fmt)
     else:
         # RNE path: the per-format fast encode (table path for takum,
         # bit-identical to takum_encode; branch-free packer for OFP8) — the
         # producer-side encode is the hot half of every requantise step
-        bits = encode_jnp_fast(xs, fmt)
+        bits = _lut().encode_jnp_fast(xs, fmt)
     return QTensor(bits, fmt, scale)
 
 
@@ -98,6 +139,10 @@ def dequantize(q: QTensor, dtype=jnp.float32):
     if q.fmt in ("f32", "bf16"):
         return q.bits.astype(dtype)
     wf = wire_format(q.fmt)
+    if wf.is_block_scaled:
+        n = q.bits.shape[-1]
+        x = blockscale.block_dequantize(q.scale, blockscale.pad_block(q.bits), wf)
+        return x[..., :n].astype(dtype)
     if wf.family == "takum":
         x = takum_decode(q.bits, takum_width(q.fmt))
     else:

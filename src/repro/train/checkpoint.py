@@ -66,6 +66,21 @@ class CheckpointManager:
                 if compress and np.issubdtype(a.dtype, np.floating):
                     # pack through the format's float64 numpy oracle; the
                     # "takum" meta key stays for old-checkpoint compat
+                    if wf.is_block_scaled:
+                        # the block codec moves whole 32-blocks on a flat
+                        # view; the logical shape rides in the meta so
+                        # restore can slice the padding back off
+                        flat = a.astype(np.float64).reshape(-1)
+                        pad = -len(flat) % 32
+                        if pad:
+                            flat = np.concatenate([flat, np.zeros(pad)])
+                        bits = wf.encode_np(flat)
+                        arrays[f"a{i}"] = bits.astype(wf.np_storage)
+                        meta_leaves.append({
+                            "takum": 0, "wire": wf.name,
+                            "dtype": str(a.dtype), "shape": list(a.shape),
+                        })
+                        continue
                     bits = wf.encode_np(a.astype(np.float64))
                     arrays[f"a{i}"] = bits.astype(wf.np_storage)
                     meta_leaves.append({
@@ -136,10 +151,17 @@ class CheckpointManager:
             a = z[f"a{i}"]
             if info.get("wire"):
                 wf = wire_format(info["wire"])
-                # takum_np parses shifted uint64 fields; the IEEE/OFP8
-                # oracles view the exact-width storage
-                raw = a.astype(np.uint64 if wf.family == "takum" else wf.np_storage)
-                a = wf.decode_np(raw).astype(info["dtype"])
+                if wf.is_block_scaled:
+                    shape = tuple(info["shape"])
+                    vals = wf.decode_np(a.astype(np.uint8))
+                    a = vals[: int(np.prod(shape))].reshape(shape).astype(info["dtype"])
+                else:
+                    # takum_np parses shifted uint64 fields; the IEEE/OFP8
+                    # oracles view the exact-width storage
+                    raw = a.astype(
+                        np.uint64 if wf.family == "takum" else wf.np_storage
+                    )
+                    a = wf.decode_np(raw).astype(info["dtype"])
             elif info["takum"]:
                 # pre-registry checkpoints: bare takum width
                 a = takum_np.decode(a.astype(np.uint64), info["takum"]).astype(info["dtype"])

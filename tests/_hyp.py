@@ -94,9 +94,20 @@ except ImportError:  # deterministic fallback
                     krow = {name: c[i] for name, c in kcols.items()}
                     fn(*args, *row, **kwargs, **krow)
 
-            # hide the sampled parameters from pytest's fixture resolution
+            # hide the sampled parameters from pytest's fixture resolution,
+            # but keep any *non-strategy* params visible so @given composes
+            # with @pytest.mark.parametrize (keyword strategies only: with
+            # positional strategies the mapping is ambiguous, hide all)
             del wrapper.__wrapped__
-            wrapper.__signature__ = inspect.Signature()
+            if strategies:
+                wrapper.__signature__ = inspect.Signature()
+            else:
+                params = [
+                    p
+                    for name, p in inspect.signature(fn).parameters.items()
+                    if name not in kw_strategies
+                ]
+                wrapper.__signature__ = inspect.Signature(params)
             return wrapper
 
         return deco

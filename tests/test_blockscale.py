@@ -1,0 +1,263 @@
+"""Block-scaled (MX-style) wire formats: container semantics, kernel
+parity, and the quantize -> kernels -> collectives end-to-end path.
+
+The format-level properties (idempotence, monotonicity, sign symmetry,
+specials, oracle agreement) live in tests/test_format_conformance.py,
+which sweeps the whole registry; this file covers what is *specific* to
+the container: E8M0 scale derivation rules, the interleaved payload
+layout, the decode-prologue/fused-epilogue kernel paths, and the stack
+integration the mxfp8 policy rides.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import wire_format
+from repro.kernels import ops, ref
+from repro.kernels.takum_codec import takum_decode_2d, takum_encode_2d
+from repro.quant import blockscale, dequantize, quantize
+
+MX_FMTS = ("mxe4m3", "mxe5m2", "mxt8")
+
+
+def _rand(shape, scale=1.0, seed=0):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+# ------------------------------------------------------------- container
+
+
+def test_scale_derivation_rules():
+    """Absmax -> E8M0 byte: the OCP algorithm plus the documented choices."""
+    # e4m3, absmax 448-ish: floor(log2) = 8, emax 8 -> byte 127 (scale 1.0)
+    amax = jnp.asarray(np.array([448.0, 1.0, 2.0**-126, 0.0, np.inf, np.nan], np.float32))
+    by = np.asarray(blockscale.scale_bytes(amax, 8))
+    assert by[0] == 127 + 8 - 8  # 2^8 binade / emax 8 -> scale 1.0
+    assert by[1] == 127 - 8  # absmax 1.0 -> scale 2^-8
+    assert by[2] == 1  # clamped to 2^-126 (byte 0 never emitted)
+    assert by[3] == blockscale.E8M0_ZERO_BLOCK  # all-zero block rule
+    assert by[4] == blockscale.E8M0_NAN and by[5] == blockscale.E8M0_NAN
+    # decode side: byte 0 clamps, 255 is NaN, everything else exact pow2
+    s = np.asarray(blockscale.e8m0_decode(jnp.arange(256, dtype=jnp.uint8)))
+    assert s[0] == np.float32(2.0**-126) and s[1] == np.float32(2.0**-126)
+    assert s[127] == 1.0 and s[254] == np.float32(2.0**127)
+    assert np.isnan(s[255])
+
+
+def test_payload_interleave_roundtrip():
+    """pack/unpack: 33-byte groups, scale byte leading its 32 elements."""
+    scales = jnp.asarray(np.arange(3, dtype=np.uint8) + 10)
+    bits = jnp.asarray(np.arange(96, dtype=np.uint8))
+    p = np.asarray(blockscale.pack_payload(scales, bits))
+    assert p.shape == (99,)
+    assert p[0] == 10 and p[33] == 11 and p[66] == 12
+    np.testing.assert_array_equal(p[1:33], np.arange(32))
+    s2, b2 = blockscale.unpack_payload(jnp.asarray(p))
+    np.testing.assert_array_equal(np.asarray(s2), np.asarray(scales))
+    np.testing.assert_array_equal(np.asarray(b2), np.asarray(bits))
+
+
+@pytest.mark.parametrize("fmt", MX_FMTS)
+def test_all_zero_and_nan_blocks(fmt):
+    wf = wire_format(fmt)
+    z = jnp.zeros((2, 64), jnp.float32)
+    p = np.asarray(wf.encode_jnp(z))
+    scales, bits = blockscale.unpack_payload(jnp.asarray(p))
+    assert (np.asarray(scales) == blockscale.E8M0_ZERO_BLOCK).all()
+    assert (np.asarray(bits) == 0).all()
+    assert (np.asarray(wf.decode_jnp(jnp.asarray(p))) == 0).all()
+    # one NaN poisons exactly its own block, not the neighbour
+    x = np.ones((64,), np.float32)
+    x[5] = np.nan
+    y = np.asarray(wf.decode_jnp(wf.encode_jnp(jnp.asarray(x))))
+    assert np.isnan(y[:32]).all() and not np.isnan(y[32:]).any()
+
+
+@pytest.mark.parametrize("fmt", MX_FMTS)
+def test_absmax_saturation_rail(fmt):
+    """The element conversion clamps at the scaled-binade top (448 / 57344 /
+    1.875) — the rule that makes the E8M0 scale a re-encode fixed point."""
+    wf = wire_format(fmt)
+    cap = blockscale.elem_cap(wf)
+    top = 2.0 ** (wf.elem_emax + 1)
+    # absmax just below the binade top: the clamp case (rounds down to cap)
+    x = np.full((32,), np.nextafter(np.float32(top), np.float32(0)), np.float32)
+    y = np.asarray(wf.decode_jnp(wf.encode_jnp(jnp.asarray(x))))
+    assert np.allclose(y, cap), (fmt, y[0], cap)
+
+
+def test_alignment_errors_are_loud():
+    with pytest.raises(ValueError, match="multiple of 32"):
+        blockscale.block_quantize(jnp.zeros((4, 31), jnp.float32), "mxe4m3")
+    with pytest.raises(ValueError, match="multiple of 33"):
+        blockscale.unpack_payload(jnp.zeros((4, 34), jnp.uint8))
+    with pytest.raises(ValueError, match="not a block-scaled"):
+        blockscale.block_quantize(jnp.zeros((4, 32), jnp.float32), "t8")
+    with pytest.raises(ValueError, match="32-multiple"):
+        takum_encode_2d(jnp.zeros((8, 31), jnp.float32), "mxe4m3")
+
+
+# ------------------------------------------------------- kernels vs refs
+
+
+@pytest.mark.parametrize("fmt", MX_FMTS)
+@pytest.mark.parametrize("impl", ("bits", "lut"))
+def test_codec_kernel_impls_bit_exact(fmt, impl):
+    """Both element-codec impls through the Pallas 2D codec == registry."""
+    x = jnp.asarray(_rand((70, 96), 3.0, seed=1))
+    enc = takum_encode_2d(x, fmt, encode_impl=impl)
+    np.testing.assert_array_equal(
+        np.asarray(enc), np.asarray(ref.codec_encode_ref(x, fmt))
+    )
+    dec = takum_decode_2d(enc, fmt, decode_impl=impl)
+    np.testing.assert_array_equal(
+        np.asarray(dec), np.asarray(ref.codec_decode_ref(enc, fmt))
+    )
+
+
+@pytest.mark.parametrize("fmt", MX_FMTS)
+def test_matmul_and_attention_vs_ref(fmt):
+    """Decode-prologue parity on non-aligned shapes (padded edge tiles)."""
+    M, K, N = 40, 96, 160  # K, N 32-multiples but not 128-multiples
+    x = jnp.asarray(_rand((M, K), seed=2))
+    wb = ref.codec_encode_ref(jnp.asarray(_rand((K, N), 0.2, seed=3)), fmt)
+    np.testing.assert_allclose(
+        np.asarray(ops.matmul(x, wb, fmt)),
+        np.asarray(ref.takum_matmul_ref(x, wb, fmt)),
+        rtol=1e-5, atol=1e-5,
+    )
+    xb = ref.codec_encode_ref(x, fmt)
+    np.testing.assert_allclose(
+        np.asarray(ops.dual_matmul(xb, wb, fmt)),
+        np.asarray(ref.takum_dual_matmul_ref(xb, wb, fmt)),
+        rtol=1e-5, atol=1e-5,
+    )
+    B, H, Hkv, S, d = 2, 4, 2, 100, 64  # S not a block_s multiple
+    q = jnp.asarray(_rand((B, H, d), seed=4))
+    kb = ref.codec_encode_ref(jnp.asarray(_rand((B, Hkv, S, d), seed=5)), fmt)
+    np.testing.assert_allclose(
+        np.asarray(ops.decode_attention(q, kb, kb, fmt)),
+        np.asarray(ref.decode_attention_ref(q, kb, kb, fmt)),
+        rtol=2e-5, atol=2e-5,
+    )
+
+
+@pytest.mark.parametrize("fmt", ("t8", "mxe4m3"))
+@pytest.mark.parametrize("out_fmt", MX_FMTS + ("t8",))
+def test_fused_block_epilogues_bit_exact(fmt, out_fmt):
+    """fused == encode(unfused) bit-for-bit on a single-K-tile grid, for
+    block-scaled inputs, outputs, and both at once (the epilogue derives
+    per-32-block scales from the accumulator tile in-register)."""
+    M, K, N = 32, 128, 128
+    x = jnp.asarray(_rand((M, K), seed=6))
+    wb = ref.codec_encode_ref(jnp.asarray(_rand((K, N), 0.2, seed=7)), fmt)
+    fused = ops.matmul(x, wb, fmt, out_fmt=out_fmt)
+    np.testing.assert_array_equal(
+        np.asarray(fused), np.asarray(ref.fused_matmul_ref(x, wb, fmt, out_fmt))
+    )
+    # attention epilogue too
+    B, H, Hkv, S, d = 1, 2, 1, 64, 64
+    q = jnp.asarray(_rand((B, H, d), seed=8))
+    kb = ref.codec_encode_ref(jnp.asarray(_rand((B, Hkv, S, d), seed=9)), fmt)
+    fa = ops.decode_attention(q, kb, kb, fmt, out_fmt=out_fmt)
+    np.testing.assert_array_equal(
+        np.asarray(fa),
+        np.asarray(ref.fused_decode_attention_ref(q, kb, kb, fmt, out_fmt)),
+    )
+
+
+def test_block_scaled_ad_wrapper_rejected():
+    from repro.kernels.takum_matmul import takum_matmul_ad
+
+    with pytest.raises(ValueError, match="block-scaled"):
+        takum_matmul_ad(
+            jnp.zeros((8, 32), jnp.float32), jnp.zeros((32, 33), jnp.uint8),
+            "mxe4m3",
+        )
+
+
+# ------------------------------------------------------ stack integration
+
+
+@pytest.mark.parametrize("fmt", MX_FMTS)
+def test_qtensor_stores_scales_and_bits(fmt):
+    """QTensor keeps logical-shape element bits + per-block scale bytes;
+    wire_payload() interleaves them; requantize is structure-preserving."""
+    from repro.quant.qtensor import requantize
+
+    x = jnp.asarray(_rand((5, 70), 2.0, seed=10))  # 70: pad/slice active
+    q = quantize(x, fmt)
+    assert q.bits.shape == x.shape and q.bits.dtype == jnp.uint8
+    assert q.scale.shape == (5, 3) and q.scale.dtype == jnp.uint8
+    assert q.nbytes_per_el == pytest.approx(33 / 32)
+    y = dequantize(q)
+    assert y.shape == x.shape
+    rel = np.abs(np.asarray(y) - np.asarray(x)) / np.sqrt(np.mean(np.asarray(x) ** 2))
+    assert float(np.median(rel)) < 0.08
+    q2 = requantize(q, y)
+    np.testing.assert_array_equal(np.asarray(q2.bits), np.asarray(q.bits))
+    np.testing.assert_array_equal(np.asarray(q2.scale), np.asarray(q.scale))
+    p = q.wire_payload()
+    assert p.shape == (5, 99)
+    # the payload decodes to the same values the QTensor dequantizes to
+    np.testing.assert_array_equal(
+        np.asarray(wire_format(fmt).decode_jnp(p))[..., :70], np.asarray(y)
+    )
+
+
+def test_quantize_to_kernels_end_to_end():
+    """The acceptance path: quantize -> wire payload -> dequant-matmul and
+    decode-attention kernels, against the QTensor's own dequantize."""
+    fmt = "mxe4m3"
+    x = jnp.asarray(_rand((24, 64), seed=11))
+    w = jnp.asarray(_rand((64, 96), 0.3, seed=12))
+    qw = quantize(w, fmt)
+    got = ops.matmul(x, qw.wire_payload(), fmt)
+    want = jnp.dot(x, dequantize(qw), preferred_element_type=jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+    B, H, Hkv, S, d = 1, 2, 1, 40, 32
+    q = jnp.asarray(_rand((B, H, d), seed=13))
+    kv = jnp.asarray(_rand((B, Hkv, S, d), seed=14))
+    qkv = quantize(kv, fmt)
+    got = ops.decode_attention(q, qkv.wire_payload(), qkv.wire_payload(), fmt)
+    want = ref.decode_attention_ref(
+        q, qkv.wire_payload(), qkv.wire_payload(), fmt
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_mxfp8_policy_serving_path():
+    """POLICIES['mxfp8'] drives prefill + decode with an mx KV cache."""
+    from repro import configs
+    from repro.models import transformer as T
+    from repro.quant.policy import POLICIES
+
+    cfg = configs.get_smoke("llama3_8b").with_(quant=POLICIES["mxfp8"])
+    tok = jnp.asarray(np.arange(2 * 12).reshape(2, 12) % cfg.vocab_size)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    logits, cache = T.prefill(cfg, params, tok, cache_len=16)
+    hd = cfg.resolved_head_dim
+    assert cache.k.dtype == jnp.uint8
+    assert cache.k.shape[-1] == blockscale.payload_len(hd)
+    lg, cache2 = T.decode_step(cfg, params, tok[:, -1], cache)
+    assert lg.shape == (2, cfg.vocab_size)
+    assert np.isfinite(np.asarray(lg)).all()
+
+
+def test_wire_bytes_accounting():
+    from repro.dist.collectives import wire_bytes_per_element
+    from repro.quant.policy import FORMAT_BITS
+
+    assert FORMAT_BITS["mxe4m3"] == pytest.approx(8.25)
+    assert wire_bytes_per_element("mxt8", 2) == pytest.approx(33 / 32)
+    # the headline reduction vs f32: 32/8.25 ~ 3.88x (not 4x — honesty tax)
+    assert wire_bytes_per_element("f32", 2) / wire_bytes_per_element(
+        "mxe4m3", 2
+    ) == pytest.approx(32 / 8.25)

@@ -34,12 +34,17 @@ OFP8_FMTS = ("e4m3", "e5m2")
 
 
 def test_registry_contents_and_resolution():
-    assert set(WIRE_FORMATS) == {"f32", "bf16", "t8", "t16", "t32", "e4m3", "e5m2"}
+    assert set(WIRE_FORMATS) == {
+        "f32", "bf16", "t8", "t16", "t32", "e4m3", "e5m2",
+        "mxe4m3", "mxe5m2", "mxt8",
+    }
     # canonical names, aliases, bare takum widths, WireFormat instances
     assert wire_format("t8") is wire_format(8) is wire_format("takum8")
     assert wire_format("e4m3") is wire_format("ofp8_e4m3")
     assert wire_format("bf16") is wire_format("bfloat16")
     assert wire_format(wire_format("t16")) is wire_format(16)
+    assert wire_format("mxfp8") is wire_format("mxe4m3")
+    assert wire_format("mxtakum8") is wire_format("mxt8")
     with pytest.raises(KeyError):
         wire_format("fp8")
     # families and special-value semantics
@@ -47,8 +52,17 @@ def test_registry_contents_and_resolution():
     assert wire_format("e4m3").special == "nan"  # no Inf: overflow -> NaN
     assert wire_format("e5m2").special == "inf"
     assert wire_format("bf16").family == "ieee"
+    # block-scaled containers: family mx, whole-block NaN semantics
+    for name in ("mxe4m3", "mxe5m2", "mxt8"):
+        wf = wire_format(name)
+        assert wf.family == "mx" and wf.special == "nan_block"
+        assert wf.is_block_scaled and wf.block == 32
+    assert wire_format("mxe4m3").elem is wire_format("e4m3")
+    assert wire_format("mxt8").elem_emax == 0
     # kernel-facing subset: every narrow registered format, no f32/t32
-    assert set(kernel_wire_names()) == {"t8", "t16", "e4m3", "e5m2", "bf16"}
+    assert set(kernel_wire_names()) == {
+        "t8", "t16", "e4m3", "e5m2", "bf16", "mxe4m3", "mxe5m2", "mxt8",
+    }
 
 
 def test_registry_storage_and_capabilities():
@@ -59,7 +73,15 @@ def test_registry_storage_and_capabilities():
     assert not wire_format("t32").supports_lut_decode
     assert wire_format("e4m3").supports_lut_encode
     assert not wire_format("bf16").supports_lut_encode
-    assert wire_format("t8").supports_sr and not wire_format("e4m3").supports_sr
+    # SR: takum bit-string SR + the new OFP8 truncate-plus-dither SR; the
+    # block containers are RNE-only (deterministic scale derivation)
+    assert wire_format("t8").supports_sr and wire_format("e4m3").supports_sr
+    assert not wire_format("bf16").supports_sr
+    assert not wire_format("mxe4m3").supports_sr
+    # wire accounting: the container adds 8 scale bits per 32-block
+    assert wire_format("t8").wire_bits_per_el == 8.0
+    assert wire_format("mxt8").wire_bits_per_el == 8.25
+    assert wire_format("mxe4m3").storage == jnp.uint8
 
 
 # ------------------------------------------------------------ decode LUTs
@@ -221,9 +243,14 @@ def test_qtensor_ofp8_roundtrip():
     qs = quantize(x, "e5m2", scaled=True)
     ys = dequantize(qs)
     assert qs.scale is not None and np.isfinite(np.asarray(ys)).all()
-    # sr_key is accepted (and ignored: OFP8 has no SR encoder)
+    # sr_key now routes OFP8 through the truncate-plus-dither SR encoder
+    # (this PR's ROADMAP satellite): codes land on one of the two codes
+    # bracketing the value, i.e. within one code of the RNE encode
     qk = quantize(x, "e4m3", sr_key=jax.random.PRNGKey(0))
-    np.testing.assert_array_equal(np.asarray(qk.bits), np.asarray(q.bits))
+    delta = np.abs(
+        np.asarray(qk.bits, np.int32) - np.asarray(q.bits, np.int32)
+    )
+    assert int(delta.max()) <= 1 and int(delta.sum()) > 0
 
 
 def test_quant_policy_mixed_formats():

@@ -455,6 +455,33 @@ def test_ops_codec_nd_shapes_and_fallbacks():
     assert ops.encode(empty, "t8").shape == (0, 4)
 
 
+@pytest.mark.parametrize("fmt", ("t8", "t16", "e4m3", "bf16"))
+def test_ops_codec_nd_degenerate_2d_shapes(fmt):
+    """The flatten-to-2D fast path at its degenerate corners: single-row
+    (1, n), single-column (n, 1), 1x1, and length-0 axes (2D and 3D) —
+    shapes the padded-grid kernels cover with one masked tile or that must
+    fall back to the reference (size 0).  Bit equality with the jnp
+    reference and exact shape preservation, both directions."""
+    from repro.kernels import ops
+
+    wf_storage_shapes = [
+        (1, 7), (1, 513), (7, 1), (513, 1), (1, 1),
+        (0, 5), (5, 0), (0, 0), (3, 0, 4), (0,),
+    ]
+    for i, shape in enumerate(wf_storage_shapes):
+        x = jnp.asarray(_rand(shape, 1.0, seed=23 + i))
+        enc = ops.encode(x, fmt)
+        assert enc.shape == x.shape, (fmt, shape)
+        np.testing.assert_array_equal(
+            np.asarray(enc), np.asarray(ref.codec_encode_ref(x, fmt))
+        )
+        dec = ops.decode(enc, fmt)
+        assert dec.shape == x.shape, (fmt, shape)
+        np.testing.assert_array_equal(
+            np.asarray(dec), np.asarray(ref.codec_decode_ref(enc, fmt))
+        )
+
+
 @pytest.mark.parametrize("fmt", ("e4m3", "e5m2"))
 @pytest.mark.parametrize("impl", ("bits", "lut"))
 def test_ofp8_codec_kernel_impls_bit_exact(fmt, impl):
