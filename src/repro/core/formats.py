@@ -448,6 +448,112 @@ def wire_names() -> tuple[str, ...]:
     return tuple(WIRE_FORMATS)
 
 
+# ---------------------------------------------------------------------------
+# special-value telemetry (the paper's one-special-vs-zoo contrast, measured)
+# ---------------------------------------------------------------------------
+#
+# One predicate per family, over raw *payload bits* — no decode needed, so a
+# health counter on a collective hop or a KV-cache append costs a compare and
+# a popcount, not a codec pass:
+#
+#   takum  — exactly one special code: NaR = 1 0...0 (two's-complement sign
+#            bit alone).  Finite overflow saturates, so NaR is the *only*
+#            non-finite pattern a takum payload can carry.
+#   ofp8   — E4M3 (special='nan'): S.1111.111 is NaN, no Inf exists;
+#            E5M2 (special='inf'): exponent all-ones is Inf (mantissa 0) or
+#            NaN (mantissa != 0) — the IEEE zoo's per-format case split.
+#   ieee   — bf16/f32: exponent all-ones (Inf or NaN).
+#   mx     — a block is special iff its E8M0 scale byte is 255 (the OCP
+#            NaN-scale rule: every element of the block decodes NaN) OR an
+#            element byte is special per the element family (the encoder
+#            never emits those — saturating conversion + zeroed NaN-block
+#            elements — but corrupted payloads can, and they decode to
+#            NaN/Inf through the scale multiply).
+#
+# The mask is per logical *element* (mx: 32 lanes per 33-byte group), so
+# ``count_specials / element count`` is comparable across families — the
+# quantity the degradation-ladder health checks threshold on.  The f64
+# oracle property (tests/test_format_conformance.py) pins the semantics:
+# the mask is exactly ``~isfinite(decode_np(payload))``.
+
+
+def _flat_special_mask(wf: WireFormat, bits, xp):
+    """Special-code predicate for a flat (non-container) format; ``xp`` is
+    jnp or np (the predicate is pure compares, shared verbatim)."""
+    u = xp.asarray(bits)
+    if not xp.issubdtype(u.dtype, xp.unsignedinteger):
+        # bf16 wires travel as bfloat16 arrays in some hops; view the bits
+        u = (
+            jax.lax.bitcast_convert_type(u, wf.storage)
+            if xp is jnp
+            else u.view(wf.np_storage)
+        )
+    if wf.family == "takum":
+        nar = u.dtype.type(1) << (wf.nbits - 1)
+        return (u & u.dtype.type((1 << wf.nbits) - 1)) == nar
+    if wf.name == "e4m3":
+        return (u & u.dtype.type(0x7F)) == u.dtype.type(0x7F)
+    if wf.name == "e5m2":
+        return (u & u.dtype.type(0x7C)) == u.dtype.type(0x7C)
+    if wf.name == "bf16":
+        return (u & u.dtype.type(0x7FFF)) >= u.dtype.type(0x7F80)
+    if wf.name == "f32":
+        return (u & u.dtype.type(0x7FFFFFFF)) >= u.dtype.type(0x7F800000)
+    raise KeyError(f"no special predicate for wire format {wf.name!r}")
+
+
+def _special_mask(payload, fmt, xp):
+    wf = wire_format(fmt)
+    if not wf.is_block_scaled:
+        return _flat_special_mask(wf, payload, xp)
+    # interleaved mx payload: [..., nb*33] -> per-element mask [..., nb*32]
+    L = payload.shape[-1]
+    if L % 33:
+        raise ValueError(
+            f"{wf.name} payload last dim {L} is not a multiple of 33 "
+            "(33-byte groups: [scale | 32 elems])"
+        )
+    nb = L // 33
+    grp = xp.asarray(payload).reshape(payload.shape[:-1] + (nb, 33))
+    scale_nan = grp[..., :1] == xp.uint8(255)  # E8M0 NaN-scale byte
+    elem = _flat_special_mask(wf.elem, grp[..., 1:], xp)
+    return (elem | scale_nan).reshape(payload.shape[:-1] + (nb * 32,))
+
+
+def special_mask_jnp(payload, fmt):
+    """Per-element bool mask: which logical elements of a wire payload decode
+    to a non-finite value.  Pure jnp compares (trace/shard_map-safe)."""
+    return _special_mask(payload, fmt, jnp)
+
+
+def special_mask_np(payload, fmt):
+    """Numpy sibling of :func:`special_mask_jnp` (same bit predicates)."""
+    return _special_mask(np.asarray(payload), fmt, np)
+
+
+def count_specials(payload, fmt):
+    """Number of special (non-finite-decoding) elements in a wire payload.
+
+    Uniform across the registry — NaR codes for takum, NaN/Inf codes for
+    OFP8/bf16/f32, NaN-scale blocks (32 elements each) plus corrupted
+    element bytes for the mx containers — which is what makes the paper's
+    one-special-vs-zoo contrast a *measured* quantity: the same counter
+    reads every family's health.  Returns a jnp int32 scalar (or a python
+    int for numpy inputs via :func:`special_mask_np`).
+    """
+    return jnp.sum(special_mask_jnp(payload, fmt), dtype=jnp.int32)
+
+
+def special_fraction(payload, fmt):
+    """``count_specials / logical element count`` as an f32 scalar — the
+    health-check quantity the degradation ladder thresholds on."""
+    wf = wire_format(fmt)
+    n = payload.size
+    if wf.is_block_scaled:
+        n = (n // 33) * 32
+    return count_specials(payload, fmt).astype(jnp.float32) / max(n, 1)
+
+
 def kernel_wire_names() -> tuple[str, ...]:
     """Formats the Pallas kernels must be able to dispatch on: every
     registered narrow (<= 16-bit) wire format, the block-scaled containers

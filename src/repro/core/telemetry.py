@@ -1,0 +1,102 @@
+"""Host-side numeric-health counters for the wire stack.
+
+The fault-containment layer (DESIGN.md §8) measures rather than hides:
+special-value counts on collective hops, KV-cache appends and quantize
+calls, degradation-ladder escalations, contained (zeroed) hop elements,
+skipped optimizer updates.  All of those happen *inside* jitted/shard_map
+regions, so the counters are surfaced through ``jax.debug.callback`` into a
+process-global :class:`collections.Counter`.
+
+Usage::
+
+    with telemetry.capture() as counters:
+        fn = jax.jit(step)          # trace INSIDE the capture scope
+        fn(...)
+    counters["wire.escalations"]    # accumulated across all calls
+
+Two gates keep the cost at zero when nobody is listening:
+
+* ``emit`` is a **trace-time** no-op unless a capture scope is active when
+  the emitting code is *traced* — a jitted function traced outside
+  ``capture()`` carries no callbacks at all (and, conversely, one traced
+  inside keeps emitting for its cached lifetime; chaos tests run in fresh
+  subprocesses so neither direction leaks).
+* at runtime, values arriving while no capture is active are dropped.
+
+Counters are plain float sums keyed by dotted tags (``"wire.contained"``,
+``"wire.rung.t16"``, ``"kv.specials.e4m3"``, ...).  Under shard_map every
+device emits, so per-device quantities arrive ``N``-fold; emit either
+pre-reduced values or document the multiplicity at the tag (the guarded
+collectives emit psum'd scalars, which makes the sum ``N * global`` — the
+tests divide or compare against zero, both multiplicity-proof).
+"""
+
+from __future__ import annotations
+
+import collections
+import contextlib
+import functools
+import threading
+
+import jax
+
+_LOCK = threading.Lock()
+_COUNTERS: collections.Counter = collections.Counter()
+_DEPTH = 0  # capture scopes may nest; any active scope enables recording
+
+
+def enabled() -> bool:
+    """True while at least one :func:`capture` scope is active."""
+    return _DEPTH > 0
+
+
+def record(tag: str, value) -> None:
+    """Host-side accumulate (the callback target; also callable directly)."""
+    if _DEPTH > 0:
+        with _LOCK:
+            _COUNTERS[tag] += float(value)
+
+
+def emit(tag: str, value) -> None:
+    """Trace-safe counter emission: inside jit/shard_map this schedules an
+    unordered debug callback; outside it records immediately.  A no-op
+    (zero ops in the trace) unless a capture scope is active at trace time.
+    """
+    if _DEPTH > 0:
+        # the tag is static (a python string, not a jax type): close over it
+        jax.debug.callback(functools.partial(record, tag), value, ordered=False)
+
+
+def counters() -> dict:
+    """Snapshot of the accumulated counters."""
+    with _LOCK:
+        return dict(_COUNTERS)
+
+
+def reset() -> None:
+    with _LOCK:
+        _COUNTERS.clear()
+
+
+@contextlib.contextmanager
+def capture(fresh: bool = True):
+    """Enable counter recording; yields the live Counter.  ``fresh`` resets
+    accumulated state on entry (nested scopes share one Counter).
+
+    Exit blocks on :func:`jax.effects_barrier`: the debug callbacks are
+    unordered and asynchronous, so without a flush an emission from a
+    just-finished computation can land after the scope closes — and be
+    dropped by the runtime gate.  Flushing before the depth decrement makes
+    the exited Counter complete for everything launched inside the scope.
+    """
+    global _DEPTH
+    if fresh and _DEPTH == 0:
+        reset()
+    _DEPTH += 1
+    try:
+        yield _COUNTERS
+    finally:
+        try:
+            jax.effects_barrier()
+        finally:
+            _DEPTH -= 1

@@ -37,11 +37,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import ofp8
-from repro.core.formats import wire_format
+from repro.core import ofp8, telemetry
+from repro.core.formats import special_fraction, wire_format
 from repro.core.takum import takum_encode_sr
 from repro.kernels.lut import decode_jnp_fast, encode_jnp_fast
 from repro.quant import blockscale
+
+from . import faults
 
 IS_STUB = False
 
@@ -66,7 +68,7 @@ def wire_codec(fmt, *, sr_key=None):
         raise ValueError("f32 is the accumulate format, not a compressed wire")
     if wf.name == "bf16":
         return (
-            lambda v: v.astype(jnp.bfloat16),
+            _arm_encode(lambda v: v.astype(jnp.bfloat16), wf.name),
             lambda m: m.astype(jnp.float32),
         )
     if wf.is_block_scaled:
@@ -74,7 +76,7 @@ def wire_codec(fmt, *, sr_key=None):
         # decode(encode(x)) is a codec fixed point here too (the conformance
         # suite's idempotence property), so the ring never re-encodes
         return (
-            lambda v: encode_jnp_fast(v, wf.name),
+            _arm_encode(lambda v: encode_jnp_fast(v, wf.name), wf.name),
             lambda m: decode_jnp_fast(m, wf.name),
         )
     if not wf.supports_lut_decode:
@@ -93,7 +95,18 @@ def wire_codec(fmt, *, sr_key=None):
         # compressed psum.  The takum encode tables are numpy-built, hence
         # safe to first-build inside eager shard_map traces.
         encode = lambda v: encode_jnp_fast(v, wf.name)
-    return encode, (lambda m: decode_jnp_fast(m, wf.name))
+    return _arm_encode(encode, wf.name), (lambda m: decode_jnp_fast(m, wf.name))
+
+
+def _arm_encode(encode, fmt_name: str):
+    """Trace-time fault hook: inside a ``faults.inject`` scope with wire
+    corruption enabled, encoded payloads take the configured byte/bit and
+    mx-scale faults on their way out; otherwise ``encode`` is untouched
+    (zero extra trace ops)."""
+    cfg = faults.active()
+    if cfg is None or not cfg.corrupts_wire:
+        return encode
+    return lambda v: faults.corrupt_payload(encode(v), fmt_name)
 
 
 def axis_size(axis_name) -> int:
@@ -102,7 +115,7 @@ def axis_size(axis_name) -> int:
 
 
 def _ring_reduce(wire, own_f32, axis_name, decode, N: int,
-                 canonical_order: bool = True):
+                 canonical_order: bool = True, contain_abs=None):
     """P-1 ``ppermute`` hops of narrow wire payloads; f32 sum of the decodes.
 
     ``wire`` is this device's encoded contribution (takum bits or bf16),
@@ -115,18 +128,36 @@ def _ring_reduce(wire, own_f32, axis_name, decode, N: int,
     regions (in partially-auto regions it becomes an XLA PartitionId, which
     SPMD cannot partition) — callers in partial-auto contexts pass False and
     accept ulp-level cross-pod divergence from the per-device hop order.
+
+    ``contain_abs`` arms corruption containment (DESIGN.md §8): every term
+    entering the reduction has its non-finite and ``|v| > contain_abs``
+    elements zeroed — a flipped takum/bf16 wire byte decodes to NaR/NaN/Inf
+    or an implausible ~1e38 magnitude, and one such element would otherwise
+    poison the whole reduction.  Returns ``(sum, contained)`` where
+    ``contained`` is this device's f32 count of zeroed elements (0.0 when
+    containment is off); each hop message lands on exactly one device, so
+    the per-device counts sum to the global count.
     """
+    def arm(term):
+        if contain_abs is None:
+            return term, jnp.float32(0)
+        bad = ~jnp.isfinite(term) | (jnp.abs(term) > contain_abs)
+        return jnp.where(bad, jnp.float32(0), term), jnp.sum(bad, dtype=jnp.float32)
+
     perm = [(i, (i + 1) % N) for i in range(N)]
-    terms = [own_f32]  # hop 0 = own payload = source p
+    own, contained = arm(own_f32)
+    terms = [own]  # hop 0 = own payload = source p
     msg = wire
     for _ in range(N - 1):
-        msg = jax.lax.ppermute(msg, axis_name, perm)
-        terms.append(decode(msg))  # hop i carries source (p - i) % N
+        msg = faults.corrupt_hop(jax.lax.ppermute(msg, axis_name, perm), axis_name)
+        term, c = arm(decode(msg))  # hop i carries source (p - i) % N
+        contained = contained + c
+        terms.append(term)
     stacked = jnp.stack(terms)
     if canonical_order:
         p = jax.lax.axis_index(axis_name)
         stacked = jnp.take(stacked, (p - jnp.arange(N)) % N, axis=0)
-    return jnp.sum(stacked, axis=0)
+    return jnp.sum(stacked, axis=0), contained
 
 
 def compressed_psum(x, axis_name, fmt="t8", *, exact_local: bool = True,
@@ -167,7 +198,7 @@ def compressed_psum(x, axis_name, fmt="t8", *, exact_local: bool = True,
     encode, decode = wire_codec(wf.name, sr_key=sr_key)
     wire = encode(xf)
     own = xf if exact_local else decode(wire)
-    out = _ring_reduce(wire, own, axis_name, decode, N, canonical_order)
+    out, _ = _ring_reduce(wire, own, axis_name, decode, N, canonical_order)
     if wf.is_block_scaled:
         out = out[..., :n].reshape(jnp.shape(x))
     return out
@@ -180,6 +211,102 @@ def compressed_pmean(x, axis_name, fmt="t8", *, exact_local: bool = False,
     N = axis_size(axis_name)
     return compressed_psum(
         x, axis_name, fmt, exact_local=exact_local,
+        canonical_order=canonical_order, sr_key=sr_key,
+    ) / N
+
+
+def degraded_psum(x, axis_name, fmt, guard, *, exact_local: bool = True,
+                  canonical_order: bool = True, sr_key=None):
+    """Guarded all-reduce-sum: ``compressed_psum`` plus the fault guards of
+    a :class:`~repro.quant.policy.GuardPolicy` (DESIGN.md §8).
+
+    Three layers, innermost first:
+
+    1. **input containment** — non-finite elements of the local contribution
+       are zeroed (and counted) before anything touches the wire, so one
+       poisoned lane cannot NaR-saturate its encode and wipe the payload.
+    2. **hop containment** — arriving ring terms pass the
+       ``contain_hops``/``contain_abs`` rail of :func:`_ring_reduce`.
+    3. **the degradation ladder** — per rung, a *local* health check (encoded
+       payload special fraction, plus the relative rms quantisation error of
+       the finite lanes) is psum'd into a ring-uniform trip flag; on trip the
+       hop re-runs one rung wider (``guard.ladder_from(fmt)``), with f32 =
+       exact ``lax.psum`` as the unconditional last refuge.  The psum *must*
+       precede the branch: a collective inside a divergent ``lax.cond`` arm
+       deadlocks the ring.  Only the chosen rung's ring executes (nested
+       ``lax.cond``), so the steady-state cost is one narrow ring plus one
+       scalar psum per non-final rung.
+
+    Telemetry (when a :func:`repro.core.telemetry.capture` scope is active at
+    trace time): ``wire.calls``, ``wire.rung`` (chosen rung index),
+    ``wire.escalated``, ``wire.rung.<fmt>`` per-rung hit counts,
+    ``wire.contained`` (zeroed hop elements), ``wire.specials_in`` (poisoned
+    input lanes) — all per-device, summed across the ring by the callback.
+    """
+    xf = x.astype(jnp.float32)
+    shape = jnp.shape(x)
+    n = xf.shape[-1] if xf.ndim else 1
+    bad_in = ~jnp.isfinite(xf)
+    n_bad = jnp.sum(bad_in, dtype=jnp.float32)
+    xf = jnp.where(bad_in, jnp.float32(0), xf)
+    rungs = guard.ladder_from(wire_format(fmt).name)
+    N = axis_size(axis_name)
+    contain = guard.contain_abs if guard.contain_hops else None
+
+    if N == 1 or rungs == ("f32",):
+        out = xf if N == 1 else jax.lax.psum(xf, axis_name)
+        rung = jnp.float32(0)
+        contained = jnp.float32(0)
+    else:
+        def attempt(i):
+            wf = wire_format(rungs[i])
+            if wf.name == "f32":
+                telemetry.emit("wire.rung.f32", jnp.float32(1))
+                return jax.lax.psum(xf, axis_name), jnp.float32(i), jnp.float32(0)
+            xp = blockscale.pad_block(jnp.atleast_1d(xf)) if wf.is_block_scaled else xf
+            key = sr_key if wf.family in ("takum", "ofp8") else None
+            encode, decode = wire_codec(wf.name, sr_key=key)
+            wire = encode(xp)
+            q = decode(wire)
+
+            def ring():
+                own = xp if exact_local else q
+                out, contained = _ring_reduce(
+                    wire, own, axis_name, decode, N, canonical_order,
+                    contain_abs=contain)
+                if wf.is_block_scaled:
+                    out = out[..., :n].reshape(shape)
+                telemetry.emit(f"wire.rung.{wf.name}", jnp.float32(1))
+                return out, jnp.float32(i), contained
+
+            if i == len(rungs) - 1:
+                return ring()  # last rung: no refuge left, send regardless
+            spec = special_fraction(wire, wf.name)
+            fin = jnp.isfinite(q)
+            err = jnp.where(fin, q - xp, jnp.float32(0))
+            rel = jnp.sqrt(jnp.mean(jnp.square(err))) / (
+                jnp.sqrt(jnp.mean(jnp.square(xp))) + jnp.float32(1e-12))
+            trip_local = (spec > guard.max_special_frac) | (rel > guard.max_rel_err)
+            # uniform trip decision BEFORE the branch (see docstring)
+            trip = jax.lax.psum(trip_local.astype(jnp.float32), axis_name) > 0
+            return jax.lax.cond(trip, lambda: attempt(i + 1), ring)
+
+        out, rung, contained = attempt(0)
+
+    telemetry.emit("wire.calls", jnp.float32(1))
+    telemetry.emit("wire.rung", rung)
+    telemetry.emit("wire.escalated", (rung > 0).astype(jnp.float32))
+    telemetry.emit("wire.contained", contained)
+    telemetry.emit("wire.specials_in", n_bad)
+    return out
+
+
+def degraded_pmean(x, axis_name, fmt, guard, *, exact_local: bool = False,
+                   canonical_order: bool = True, sr_key=None):
+    """Guarded mean-reduction (gradient sync under a GuardPolicy)."""
+    N = axis_size(axis_name)
+    return degraded_psum(
+        x, axis_name, fmt, guard, exact_local=exact_local,
         canonical_order=canonical_order, sr_key=sr_key,
     ) / N
 

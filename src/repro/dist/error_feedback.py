@@ -29,7 +29,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.formats import wire_format
+from repro.core import telemetry
+from repro.core.formats import special_fraction, wire_format
 from repro.quant import blockscale
 
 from .collectives import _ring_reduce, axis_size, wire_codec
@@ -42,7 +43,7 @@ def ef_init(params):
     return jax.tree.map(lambda a: jnp.zeros(jnp.shape(a), jnp.float32), params)
 
 
-def ef_compressed_psum(g, err, axis_name, fmt="t8"):
+def ef_compressed_psum(g, err, axis_name, fmt="t8", guard=None):
     """Compressed psum with error feedback; returns ``(reduced, new_err)``.
 
     ``g`` and ``err`` are matching pytrees (or single arrays); must be called
@@ -50,27 +51,97 @@ def ef_compressed_psum(g, err, axis_name, fmt="t8"):
     residual-corrected, quantised contributions of every ring member in f32.
     ``fmt`` is any registered lossy wire format (f32 would make the
     residuals identically zero and is rejected by :func:`wire_codec`).
+
+    With a :class:`~repro.quant.policy.GuardPolicy` the reduction takes the
+    fault guards of ``collectives.degraded_psum`` — input containment of
+    non-finite ``g + err`` lanes, the hop-containment rail, and the
+    format-degradation ladder — with one EF-specific rule (DESIGN.md §8):
+    **the residual is always computed against the format actually
+    transmitted**.  Each ladder rung re-encodes ``c`` at its own width and
+    the chosen rung's branch computes ``new_err = c - decode(encode_r(c))``;
+    the f32 refuge rung transmits exactly and returns a *zero* residual.
+    Carrying a t8-sized residual across a hop that actually went out as bf16
+    would silently double-correct next step.
     """
     wf = wire_format(fmt)
-    encode, decode = wire_codec(wf.name)
+    encode, decode = wire_codec(wf.name)  # also rejects fmt='f32' loudly
     N = axis_size(axis_name)
+    rungs = (wf.name,) if guard is None else guard.ladder_from(wf.name)
+    contain = None
+    if guard is not None and guard.contain_hops:
+        contain = guard.contain_abs
 
     def one(gl, el):
         c = gl.astype(jnp.float32) + el
         n = c.shape[-1] if c.ndim else 1
-        if wf.is_block_scaled:
-            # block codec moves whole 32-blocks; the zero padding carries
-            # zero residual (it encodes and decodes exactly), so the EF
-            # telescoping is untouched by the pad/slice
-            c = blockscale.pad_block(jnp.atleast_1d(c))
-        bits = encode(c)
-        q = decode(bits)
-        new_err = c - q
-        reduced = q if N == 1 else _ring_reduce(bits, q, axis_name, decode, N)
-        if wf.is_block_scaled:
-            shape = jnp.shape(gl)
-            reduced = reduced[..., :n].reshape(shape)
-            new_err = new_err[..., :n].reshape(shape)
+        shape = jnp.shape(gl)
+        if guard is None:
+            if wf.is_block_scaled:
+                # block codec moves whole 32-blocks; the zero padding carries
+                # zero residual (it encodes and decodes exactly), so the EF
+                # telescoping is untouched by the pad/slice
+                c = blockscale.pad_block(jnp.atleast_1d(c))
+            bits = encode(c)
+            q = decode(bits)
+            new_err = c - q
+            if N == 1:
+                reduced = q
+            else:
+                reduced, _ = _ring_reduce(bits, q, axis_name, decode, N)
+            if wf.is_block_scaled:
+                reduced = reduced[..., :n].reshape(shape)
+                new_err = new_err[..., :n].reshape(shape)
+            return reduced, new_err
+
+        bad = ~jnp.isfinite(c)
+        n_bad = jnp.sum(bad, dtype=jnp.float32)
+        c = jnp.where(bad, jnp.float32(0), c)
+
+        def at_rung(i):
+            rwf = wire_format(rungs[i])
+            if rwf.name == "f32":
+                # exact transmission: the residual telescopes to nothing
+                reduced = c if N == 1 else jax.lax.psum(c, axis_name)
+                telemetry.emit("ef.rung.f32", jnp.float32(1))
+                return reduced, jnp.zeros_like(c), jnp.float32(i), jnp.float32(0)
+            cp = blockscale.pad_block(jnp.atleast_1d(c)) if rwf.is_block_scaled else c
+            enc, dec = wire_codec(rwf.name)
+            bits = enc(cp)
+            q = dec(bits)
+
+            def send():
+                new_err = cp - q  # residual vs the format actually sent
+                if N == 1:
+                    reduced, contained_ = q, jnp.float32(0)
+                else:
+                    reduced, contained_ = _ring_reduce(
+                        bits, q, axis_name, dec, N, contain_abs=contain)
+                if rwf.is_block_scaled:
+                    out = reduced[..., :n].reshape(shape)
+                    ne = new_err[..., :n].reshape(shape)
+                else:
+                    out, ne = reduced, new_err
+                telemetry.emit(f"ef.rung.{rwf.name}", jnp.float32(1))
+                return out, ne, jnp.float32(i), contained_
+
+            if i == len(rungs) - 1:
+                return send()
+            spec = special_fraction(bits, rwf.name)
+            fin = jnp.isfinite(q)
+            errq = jnp.where(fin, q - cp, jnp.float32(0))
+            rel = jnp.sqrt(jnp.mean(jnp.square(errq))) / (
+                jnp.sqrt(jnp.mean(jnp.square(cp))) + jnp.float32(1e-12))
+            trip_local = (spec > guard.max_special_frac) | (rel > guard.max_rel_err)
+            # ring-uniform escalation: psum the trip BEFORE branching
+            trip = jax.lax.psum(trip_local.astype(jnp.float32), axis_name) > 0
+            return jax.lax.cond(trip, lambda: at_rung(i + 1), send)
+
+        reduced, new_err, rung, contained_ = at_rung(0)
+        telemetry.emit("ef.calls", jnp.float32(1))
+        telemetry.emit("ef.rung", rung)
+        telemetry.emit("ef.escalated", (rung > 0).astype(jnp.float32))
+        telemetry.emit("ef.contained", contained_)
+        telemetry.emit("ef.specials_in", n_bad)
         return reduced, new_err
 
     flat_g, treedef = jax.tree.flatten(g)

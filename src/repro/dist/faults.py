@@ -1,0 +1,246 @@
+"""Deterministic, seedable numeric-fault injection for the wire stack.
+
+Chaos harness for the fault-containment subsystem (DESIGN.md §8): a context
+manager that makes every *existing* collective / pipeline / KV-cache path
+run under configurable corruption, with no changes at the call sites.  The
+instrumented modules consult :func:`active` at trace time and apply the
+corruption ops below; when no :func:`inject` scope is active every hook is
+an identity with zero ops in the trace.
+
+Fault classes (all rates are probabilities, all draws deterministic):
+
+* **payload byte/bit flips** — each byte (uint16/32 payloads: each word) of
+  an encoded wire payload is hit with ``bit_flip_rate``; a hit XORs one
+  uniformly-chosen bit.  Models wire/HBM corruption of element bytes.
+* **E8M0 scale-byte corruption** — each 33-byte mx group's scale byte is
+  hit with ``scale_flip_rate`` (random bit flip) and with ``scale_nan_rate``
+  forced to 255, the NaN-scale byte — the worst case the OCP container
+  admits (the whole block decodes NaN).
+* **dropped / garbled ring hops** — each ``ppermute`` hop (gradient ring,
+  pipeline stage boundary) is dropped (message zeroed) with
+  ``hop_drop_rate`` or garbled (bytes bit-flipped at 8x ``bit_flip_rate``)
+  with ``hop_garble_rate``.
+* **NaN/Inf poisoning** — ``poison_grads`` hits a whole gradient payload
+  with probability ``grad_poison_rate`` per step (a ``poison_frac``
+  fraction of its elements becomes ``poison_value``); :func:`poison`
+  applies per-element poisoning to any activation tensor.
+
+Determinism: corruption randomness is derived from ``PRNGKey(seed)`` folded
+with (a) a per-instrumentation-site trace-time counter — each hook call
+site gets its own stream — and (b) a cheap content hash of the payload, so
+the pattern varies across steps/devices/tensors while remaining a pure
+function of (seed, data).  Same seed + same run => bit-identical faults.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import itertools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import wire_format
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    seed: int = 0
+    bit_flip_rate: float = 0.0  # per payload byte/word: XOR one random bit
+    scale_flip_rate: float = 0.0  # per mx scale byte: XOR one random bit
+    scale_nan_rate: float = 0.0  # per mx scale byte: force 255 (NaN scale)
+    hop_drop_rate: float = 0.0  # per ring/pipe hop: message zeroed
+    hop_garble_rate: float = 0.0  # per hop: payload bytes garbled
+    grad_poison_rate: float = 0.0  # per step: gradient payload poisoned
+    poison_frac: float = 1e-3  # fraction of elements hit when poisoned
+    poison_value: float = float("nan")  # NaN or +-Inf
+
+    @property
+    def corrupts_wire(self) -> bool:
+        return (
+            self.bit_flip_rate > 0
+            or self.scale_flip_rate > 0
+            or self.scale_nan_rate > 0
+        )
+
+    @property
+    def corrupts_hops(self) -> bool:
+        return self.hop_drop_rate > 0 or self.hop_garble_rate > 0
+
+
+_ACTIVE: FaultConfig | None = None
+_SITE = itertools.count()
+
+
+def active() -> FaultConfig | None:
+    """The FaultConfig of the innermost :func:`inject` scope, or None.
+
+    Consulted at *trace* time by the instrumented modules: a jitted
+    function traced inside an inject scope keeps its faults for its cached
+    lifetime (and one traced outside stays clean) — chaos tests run in
+    fresh subprocesses, like the dist tests, so neither direction leaks.
+    """
+    return _ACTIVE
+
+
+@contextlib.contextmanager
+def inject(cfg: FaultConfig):
+    """Activate fault injection for code traced within the scope."""
+    global _ACTIVE, _SITE
+    prev = _ACTIVE
+    _ACTIVE = cfg
+    _SITE = itertools.count()  # fresh site streams per scope: reproducible
+    try:
+        yield cfg
+    finally:
+        _ACTIVE = prev
+
+
+# ---------------------------------------------------------------------------
+# randomness plumbing
+# ---------------------------------------------------------------------------
+
+
+def _site_key(cfg: FaultConfig):
+    """A fresh per-call-site key, drawn at trace time."""
+    return jax.random.fold_in(jax.random.PRNGKey(cfg.seed), next(_SITE))
+
+
+def _as_uint(x):
+    """View any payload as unsigned words (identity for uint payloads)."""
+    if jnp.issubdtype(x.dtype, jnp.unsignedinteger):
+        return x, x.dtype
+    width = x.dtype.itemsize * 8
+    u = {8: jnp.uint8, 16: jnp.uint16, 32: jnp.uint32}[width]
+    return jax.lax.bitcast_convert_type(x, u), x.dtype
+
+
+def _from_uint(u, dtype):
+    if u.dtype == dtype:
+        return u
+    return jax.lax.bitcast_convert_type(u, dtype)
+
+
+def _mix(key, payload):
+    """Fold a cheap content hash of ``payload`` into ``key`` so the fault
+    pattern varies across steps/devices while staying deterministic."""
+    u, _ = _as_uint(payload)
+    h = jnp.sum(u.astype(jnp.uint32) * jnp.uint32(2654435761))
+    return jax.random.fold_in(key, h)
+
+
+# ---------------------------------------------------------------------------
+# corruption ops (pure jnp, shape/dtype-preserving)
+# ---------------------------------------------------------------------------
+
+
+def flip_bits(payload, key, rate: float):
+    """Hit each word with prob ``rate``; a hit XORs one random bit."""
+    if rate <= 0:
+        return payload
+    u, dtype = _as_uint(payload)
+    nbits = u.dtype.itemsize * 8
+    k1, k2 = jax.random.split(_mix(key, u))
+    hit = jax.random.bernoulli(k1, rate, u.shape)
+    idx = jax.random.randint(k2, u.shape, 0, nbits, dtype=jnp.int32)
+    flipped = u ^ (jnp.ones((), u.dtype) << idx.astype(u.dtype))
+    return _from_uint(jnp.where(hit, flipped, u), dtype)
+
+
+def _corrupt_scale_bytes(payload_u8, key, cfg: FaultConfig):
+    """mx payloads only: hit the leading byte of each 33-byte group."""
+    L = payload_u8.shape[-1]
+    nb = L // 33
+    grp = payload_u8.reshape(payload_u8.shape[:-1] + (nb, 33))
+    scales, elems = grp[..., 0], grp[..., 1:]
+    k1, k2 = jax.random.split(_mix(key, payload_u8))
+    scales = flip_bits(scales, k1, cfg.scale_flip_rate)
+    if cfg.scale_nan_rate > 0:
+        hit = jax.random.bernoulli(k2, cfg.scale_nan_rate, scales.shape)
+        scales = jnp.where(hit, jnp.uint8(255), scales)
+    grp = jnp.concatenate([scales[..., None], elems], axis=-1)
+    return grp.reshape(payload_u8.shape)
+
+
+def corrupt_payload(payload, fmt):
+    """Apply the active config's payload faults to an encoded wire payload.
+
+    Identity (no trace ops) when no inject scope is active.  ``fmt`` is the
+    payload's wire format — mx payloads additionally take the scale-byte
+    faults on the leading byte of each 33-byte group.
+    """
+    cfg = _ACTIVE
+    if cfg is None or not cfg.corrupts_wire:
+        return payload
+    wf = wire_format(fmt)
+    key = _site_key(cfg)
+    if wf.is_block_scaled:
+        k1, k2 = jax.random.split(key)
+        out = payload
+        if cfg.bit_flip_rate > 0:
+            # element bytes only: the scale byte has its own fault channel
+            L = payload.shape[-1]
+            nb = L // 33
+            grp = payload.reshape(payload.shape[:-1] + (nb, 33))
+            elems = flip_bits(grp[..., 1:], k1, cfg.bit_flip_rate)
+            grp = jnp.concatenate([grp[..., :1], elems], axis=-1)
+            out = grp.reshape(payload.shape)
+        return _corrupt_scale_bytes(out, k2, cfg)
+    return flip_bits(payload, key, cfg.bit_flip_rate)
+
+
+def corrupt_hop(msg, axis_name=None):
+    """Apply the active config's hop faults to a just-``ppermute``d message:
+    whole-message drop (zeroed) and byte garbling, decorrelated across ring
+    members via ``axis_index`` when ``axis_name`` is given."""
+    cfg = _ACTIVE
+    if cfg is None or not cfg.corrupts_hops:
+        return msg
+    key = _site_key(cfg)
+    if axis_name is not None:
+        key = jax.random.fold_in(key, jax.lax.axis_index(axis_name))
+    key = _mix(key, msg)
+    kd, kg, kf = jax.random.split(key, 3)
+    out = msg
+    if cfg.hop_garble_rate > 0:
+        garbled = flip_bits(msg, kf, min(8 * cfg.bit_flip_rate, 0.5) or 0.05)
+        out = jnp.where(jax.random.bernoulli(kg, cfg.hop_garble_rate), garbled, out)
+    if cfg.hop_drop_rate > 0:
+        out = jnp.where(
+            jax.random.bernoulli(kd, cfg.hop_drop_rate),
+            jnp.zeros((), out.dtype),
+            out,
+        )
+    return out
+
+
+def poison(x, key, rate: float, value=float("nan")):
+    """Set a ``rate`` fraction of elements to ``value`` (NaN/Inf poisoning
+    of activations or gradients)."""
+    if rate <= 0:
+        return x
+    hit = jax.random.bernoulli(key, rate, jnp.shape(x))
+    return jnp.where(hit, jnp.asarray(value, x.dtype), x)
+
+
+def poison_grads(grads, key):
+    """Per-step gradient poisoning: with prob ``grad_poison_rate`` this
+    step's gradient pytree gets a ``poison_frac`` fraction of elements set
+    to ``poison_value``.  ``key`` must advance per step (the train step
+    threads its wire key) so different steps draw independently.  Identity
+    when no inject scope is active."""
+    cfg = _ACTIVE
+    if cfg is None or cfg.grad_poison_rate <= 0:
+        return grads
+    ks, ke = jax.random.split(jax.random.fold_in(key, cfg.seed))
+    step_hit = jax.random.bernoulli(ks, cfg.grad_poison_rate)
+
+    def one(i, g):
+        hit = jax.random.bernoulli(
+            jax.random.fold_in(ke, i), cfg.poison_frac, jnp.shape(g)
+        )
+        return jnp.where(step_hit & hit, jnp.asarray(cfg.poison_value, g.dtype), g)
+
+    flat, treedef = jax.tree.flatten(grads)
+    return jax.tree.unflatten(treedef, [one(i, g) for i, g in enumerate(flat)])

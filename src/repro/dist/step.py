@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import telemetry
 from repro.core.formats import wire_format
 from repro.models import transformer as T
 from repro.optim import adamw_init, adamw_update
@@ -34,9 +35,10 @@ from repro.quant.policy import is_takum
 from repro.quant.qtensor import QTensor, dequantize, quantize
 
 from . import actx
+from . import faults
 from . import sharding as shd
 from ._compat import shard_map
-from .collectives import compressed_pmean
+from .collectives import compressed_pmean, degraded_pmean
 
 IS_STUB = False
 
@@ -75,6 +77,7 @@ def make_train_step(cfg, mesh, *, lr=3e-4, aux_weight: float = 0.01,
 
     if pod:
         fmt = cfg.quant.grad_comm
+        guard = cfg.quant.guard
         # SR now covers OFP8 too (truncate-plus-dither, DESIGN.md §6);
         # bf16 and the block-scaled containers stay RNE
         wire_sr = cfg.quant.stochastic_rounding and wire_format(fmt).supports_sr
@@ -84,6 +87,9 @@ def make_train_step(cfg, mesh, *, lr=3e-4, aux_weight: float = 0.01,
                 (loss, metrics), grads = jax.value_and_grad(_loss, has_aux=True)(
                     params, batch
                 )
+                # chaos hook: identity unless a faults.inject scope was
+                # active at trace time (grad_poison_rate > 0)
+                grads = faults.poison_grads(grads, wire_key)
                 data_axes = tuple(a for a in batch_axes if a != "pod")
                 if wire_sr:
                     # decorrelate SR noise across pods; data/model replicas
@@ -102,11 +108,19 @@ def make_train_step(cfg, mesh, *, lr=3e-4, aux_weight: float = 0.01,
                 payload = jnp.concatenate(
                     [g.astype(jnp.float32).ravel() for g in flat]
                 )
+                # raw-gradient health, checked BEFORE any containment zeroes
+                # the evidence: pmean'd into the [0,1] fraction of devices
+                # whose local grads were all-finite (1.0 = clean step)
+                grads_ok = jnp.isfinite(payload).all().astype(jnp.float32)
                 if data_axes:
                     payload = jax.lax.pmean(payload, data_axes)
-                payload = compressed_pmean(
-                    payload, "pod", fmt, sr_key=wire_key if wire_sr else None
-                )
+                sr_key = wire_key if wire_sr else None
+                if guard is None:
+                    payload = compressed_pmean(payload, "pod", fmt, sr_key=sr_key)
+                else:
+                    payload = degraded_pmean(
+                        payload, "pod", fmt, guard, sr_key=sr_key
+                    )
                 parts = jnp.split(payload, list(np.cumsum(sizes))[:-1])
                 grads = jax.tree.unflatten(
                     treedef,
@@ -114,6 +128,7 @@ def make_train_step(cfg, mesh, *, lr=3e-4, aux_weight: float = 0.01,
                      for p, g in zip(parts, flat)],
                 )
                 loss = jax.lax.pmean(loss, batch_axes)
+                metrics = {**metrics, "grad_ok": grads_ok}
                 metrics = jax.tree.map(
                     lambda m: jax.lax.pmean(m, batch_axes), metrics
                 )
@@ -139,7 +154,8 @@ def make_train_step(cfg, mesh, *, lr=3e-4, aux_weight: float = 0.01,
     else:
 
         def fwd_bwd(params, batch, wire_key):
-            del wire_key  # single-pod: GSPMD reduces grads in f32
+            # single-pod: GSPMD reduces grads in f32; wire_key only feeds
+            # the (trace-time-gated) chaos hook
             def loss_in_ctx(params, batch):
                 with actx.use_mesh(mesh):
                     return _loss(params, batch)
@@ -147,17 +163,38 @@ def make_train_step(cfg, mesh, *, lr=3e-4, aux_weight: float = 0.01,
             (loss, metrics), grads = jax.value_and_grad(loss_in_ctx, has_aux=True)(
                 params, batch
             )
+            grads = faults.poison_grads(grads, wire_key)
+            ok = jnp.float32(1)
+            for g in jax.tree.leaves(grads):
+                ok = ok * jnp.isfinite(g).all().astype(jnp.float32)
+            metrics = {**metrics, "grad_ok": ok}
             return loss, metrics, grads
 
     def step(state: TrainState, batch):
         rng, sr_key, wire_key = jax.random.split(state.rng, 3)
         loss, metrics, grads = fwd_bwd(state.params, batch, wire_key)
         use_sr = cfg.quant.stochastic_rounding and is_takum(cfg.quant.opt_state)
-        params, opt = adamw_update(
+        new_params, new_opt = adamw_update(
             grads, state.opt, state.params, lr=lr, fmt=cfg.quant.opt_state,
             key=sr_key if use_sr else None,
         )
         out = {"loss": loss, "ce": metrics["ce"], "aux": metrics["aux"]}
+        guard = cfg.quant.guard
+        if guard is not None and guard.skip_nonfinite_update:
+            # GradScaler-style microbatch skip: a step whose raw gradients
+            # were not everywhere finite leaves params AND opt state
+            # untouched (training on contained-to-zero garbage would still
+            # corrupt the Adam moments).  grad_ok is a pmean'd fraction, so
+            # every device takes the same branch.
+            ok = metrics["grad_ok"] >= jnp.float32(0.999)
+            keep = lambda n, o: jnp.where(ok, n, o)
+            params = jax.tree.map(keep, new_params, state.params)
+            opt = jax.tree.map(keep, new_opt, state.opt)
+            telemetry.emit("step.calls", jnp.float32(1))
+            telemetry.emit("step.skipped", jnp.float32(1) - ok.astype(jnp.float32))
+            out["grad_ok"] = metrics["grad_ok"]
+        else:
+            params, opt = new_params, new_opt
         return TrainState(params=params, opt=opt, rng=rng), out
 
     return step

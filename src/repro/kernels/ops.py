@@ -82,6 +82,46 @@ def _as_2d(x):
     return x.reshape(-1, x.shape[-1]), x.shape
 
 
+def _check_mx_payload(bits, name: str, what: str) -> None:
+    """Loud shape validation for block-scaled *payload* operands.
+
+    An mx payload interleaves one E8M0 scale byte with 32 element bytes per
+    block — ``[scale | 32 elems]`` groups of 33 bytes on the last axis.  A
+    last dim that is zero or not a multiple of 33 is a truncated or
+    misaligned payload; decoding it would silently shear every scale byte
+    into the element lanes, so it is rejected here (at the dispatch layer,
+    before either the Pallas kernel or the jnp reference sees it).
+    """
+    wf = wire_format(name)
+    if not wf.is_block_scaled or bits.ndim == 0:
+        return
+    L = bits.shape[-1]
+    if L == 0 or L % 33:
+        raise ValueError(
+            f"{what} for block-scaled format {wf.name!r} has last dim {L}, "
+            f"not a (nonzero) multiple of 33: a valid payload is whole "
+            f"[scale|32 elems] 33-byte groups — this payload is truncated "
+            f"or misaligned"
+        )
+
+
+def _check_mx_encode_input(x, name: str) -> None:
+    """Block-scaled ``encode`` needs whole 32-element blocks on the last
+    axis (callers that own the logical shape pad via
+    ``quant.blockscale.pad_block``)."""
+    wf = wire_format(name)
+    if not wf.is_block_scaled or x.ndim == 0:
+        return
+    n = x.shape[-1]
+    if n == 0 or n % 32:
+        raise ValueError(
+            f"encode to block-scaled format {wf.name!r} needs a last dim "
+            f"that is a (nonzero) multiple of 32, got {n}: the container "
+            f"quantises whole 32-element blocks (zero-pad with "
+            f"quant.blockscale.pad_block)"
+        )
+
+
 def _kernel_fmt_ok(name: str) -> bool:
     """Formats the Pallas kernel codecs can move: wide takums (t32) are
     excluded — the kernel codec bodies only cover n <= 16 (``resolve_impl``
@@ -119,6 +159,7 @@ def encode(x, fmt, encode_impl=None):
     fall back to the jnp reference (see ``_kernelable``).
     """
     name = _name(fmt)
+    _check_mx_encode_input(x, name)
     if _kernelable(x, name):
         x2, shape = _as_2d(x)
         out = takum_encode_2d(x2, name, encode_impl=encode_impl)
@@ -128,6 +169,7 @@ def encode(x, fmt, encode_impl=None):
 
 def decode(bits, fmt, decode_impl=None):
     name = _name(fmt)
+    _check_mx_payload(bits, name, "decode payload")
     if _kernelable(bits, name):
         b2, shape = _as_2d(bits)
         out = takum_decode_2d(b2, name, decode_impl=decode_impl)
@@ -143,6 +185,7 @@ def matmul(x, w_bits, fmt, out_dtype=jnp.float32, decode_impl=None,
     (returns packed bits; semantics ``encode(matmul)`` — ref.fused_matmul_ref).
     """
     name = _name(fmt)
+    _check_mx_payload(w_bits, name, "matmul w_bits")
     out_name = _name(out_fmt) if out_fmt is not None else None
     if _USE_KERNELS and _kernel_fmt_ok(name) and (
         out_name is None or _kernel_fmt_ok(out_name)
@@ -159,6 +202,8 @@ def matmul(x, w_bits, fmt, out_dtype=jnp.float32, decode_impl=None,
 def dual_matmul(x_bits, w_bits, fmt, out_dtype=jnp.float32, decode_impl=None,
                 out_fmt=None, encode_impl=None, **blocks):
     name = _name(fmt)
+    _check_mx_payload(x_bits, name, "dual_matmul x_bits")
+    _check_mx_payload(w_bits, name, "dual_matmul w_bits")
     out_name = _name(out_fmt) if out_fmt is not None else None
     if _USE_KERNELS and _kernel_fmt_ok(name) and (
         out_name is None or _kernel_fmt_ok(out_name)
@@ -175,6 +220,8 @@ def dual_matmul(x_bits, w_bits, fmt, out_dtype=jnp.float32, decode_impl=None,
 def decode_attention(q, k_bits, v_bits, fmt, decode_impl=None, out_fmt=None,
                      encode_impl=None, **kw):
     name = _name(fmt)
+    _check_mx_payload(k_bits, name, "decode_attention k_bits")
+    _check_mx_payload(v_bits, name, "decode_attention v_bits")
     out_name = _name(out_fmt) if out_fmt is not None else None
     if _USE_KERNELS and _kernel_fmt_ok(name) and (
         out_name is None or _kernel_fmt_ok(out_name)

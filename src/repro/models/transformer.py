@@ -25,9 +25,11 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import telemetry
 from repro.core.takum import takum_decode
+from repro.dist import faults
 from repro.dist.actx import constrain
-from repro.core.formats import wire_format
+from repro.core.formats import count_specials, wire_format
 from repro.kernels.lut import encode_jnp_fast
 from repro.quant.policy import is_takum, takum_width
 from .attention import flash_attention
@@ -343,18 +345,32 @@ def _encode_cache(cfg, x):
     The append is encoded *at the producer* — the fast per-format encode
     (table path for takum, bit-identical to the codec; branch-free packer
     for OFP8) runs on the fresh K/V projections right where they are
-    computed, instead of a second codec pass over the cache."""
+    computed, instead of a second codec pass over the cache.
+
+    This is also a fault-containment surface (DESIGN.md §8): appended
+    payloads take the active :mod:`repro.dist.faults` corruption (modelling
+    HBM/cache bit rot), and under a telemetry capture each append counts
+    its special codes (``kv.specials.<fmt>``) — poisoned K/V projections
+    show up here one decode step before they show up as NaN logits."""
     fmt = cfg.quant.kv_cache
     wf = wire_format(fmt)
     if wf.is_block_scaled:
         from repro.quant import blockscale
 
-        return encode_jnp_fast(
+        bits = encode_jnp_fast(
             blockscale.pad_block(x.astype(jnp.float32)), wf.name
         )
-    if wf.family in ("takum", "ofp8"):
-        return encode_jnp_fast(x.astype(jnp.float32), wf.name)
-    return x.astype(jnp.bfloat16 if fmt == "bf16" else jnp.float32)
+    elif wf.family in ("takum", "ofp8"):
+        bits = encode_jnp_fast(x.astype(jnp.float32), wf.name)
+    else:
+        bits = x.astype(jnp.bfloat16 if fmt == "bf16" else jnp.float32)
+        if fmt == "f32":
+            return bits  # exact storage: nothing to corrupt or count
+    bits = faults.corrupt_payload(bits, wf.name)
+    if telemetry.enabled():
+        telemetry.emit(f"kv.appends.{wf.name}", jnp.float32(1))
+        telemetry.emit(f"kv.specials.{wf.name}", count_specials(bits, wf.name))
+    return bits
 
 
 def _decode_cache(cfg, bits, hd: int | None = None):

@@ -34,6 +34,7 @@ technique under study.
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 from repro.core.formats import WIRE_FORMATS, wire_format
 
@@ -57,6 +58,57 @@ def takum_width(fmt: str) -> int:
 
 
 @dataclasses.dataclass(frozen=True)
+class GuardPolicy:
+    """Numeric-fault guards + the graceful format-degradation ladder.
+
+    When a guarded wire hop's health check trips — the special fraction of
+    the encoded payload exceeds ``max_special_frac``, or the local
+    quantisation error ``rms(decode(encode(x)) - x) / rms(x)`` exceeds
+    ``max_rel_err`` — the hop escalates the wire format along ``ladder``
+    (first rung at or after the policy's configured format; monotonically
+    widening, f32 = exact passthrough as the final refuge), re-running the
+    health check per rung.  The decision is psum'd across the ring so every
+    member escalates together (a collective inside a divergent branch would
+    deadlock).  Orthogonally, ``contain_hops`` zeroes non-finite elements of
+    *arriving* ring terms (corruption containment: a flipped wire byte can
+    decode to NaR/NaN/Inf or a 1e38-magnitude takum — both are caught, the
+    magnitude rail via ``contain_abs``), and ``skip_nonfinite_update``
+    makes the train step drop a poisoned microbatch (params/opt state held,
+    counted in telemetry) instead of training on garbage.
+
+    The ladder state machine, EF-residual rules across escalation, and the
+    telemetry tags are specified in DESIGN.md §8.
+    """
+
+    ladder: tuple[str, ...] = ("t8", "t16", "bf16", "f32")
+    max_special_frac: float = 1e-3  # encoded-payload special fraction bound
+    max_rel_err: float = 0.25  # local encode relative rms error bound
+    contain_hops: bool = True  # zero non-finite elements of arriving terms
+    contain_abs: float = 1e30  # arriving |element| above this is corruption
+    skip_nonfinite_update: bool = True  # drop poisoned-grad microbatches
+
+    def __post_init__(self):
+        assert len(self.ladder) >= 1
+        widths = []
+        for f in self.ladder:
+            wf = wire_format(f)  # raises KeyError on unregistered rungs
+            widths.append(wf.wire_bits_per_el)
+        assert widths == sorted(widths), (
+            "degradation ladder must widen monotonically", self.ladder)
+
+    def ladder_from(self, fmt: str) -> tuple[str, ...]:
+        """The escalation rungs for a hop configured at ``fmt``: ``fmt``
+        itself, then every ladder rung strictly wider than it."""
+        base = wire_format(fmt).name
+        w = wire_format(base).wire_bits_per_el
+        tail = tuple(
+            f for f in self.ladder
+            if f != base and wire_format(f).wire_bits_per_el > w
+        )
+        return (base,) + tail
+
+
+@dataclasses.dataclass(frozen=True)
 class QuantPolicy:
     weights: str = "bf16"  # storage format for linear/embedding weights
     kv_cache: str = "bf16"  # serving KV cache
@@ -67,6 +119,7 @@ class QuantPolicy:
     scale_tensors: bool = True  # rescale to RMS~1 before takum encode (taper sweet spot)
     stochastic_rounding: bool = True  # for grad_comm / opt_state takum encodes
     pipe_act: str = "f32"  # pipeline-parallel inter-stage activation hops
+    guard: Optional[GuardPolicy] = None  # fault guards + degradation ladder
 
     _SURFACES = ("weights", "kv_cache", "grad_comm", "opt_state", "checkpoint", "pipe_act")
 
@@ -75,6 +128,7 @@ class QuantPolicy:
             f = getattr(self, s)
             assert f in FORMAT_BITS, (s, f)
         assert self.activations in ("bf16", "f32")
+        assert self.guard is None or isinstance(self.guard, GuardPolicy)
 
     def bytes_per_el(self, surface: str) -> float:
         return FORMAT_BITS[getattr(self, surface)] / 8
@@ -98,10 +152,18 @@ TAKUM_AGGRESSIVE = QuantPolicy(
     weights="t8", kv_cache="t8", grad_comm="t8", opt_state="t8",
     checkpoint="t16", pipe_act="t8",
 )
+TAKUM_GUARDED = QuantPolicy(
+    # the aggressive wire config hardened by the fault guards: hop
+    # containment + the t8 -> t16 -> bf16 -> f32 degradation ladder + the
+    # poisoned-microbatch skip (the chaos smoke's policy under test)
+    weights="t16", kv_cache="t8", grad_comm="t8", opt_state="t16",
+    checkpoint="t16", pipe_act="t8", guard=GuardPolicy(),
+)
 POLICIES = {
     "bf16": BF16_BASELINE,
     "ofp8": OFP8_BASELINE,
     "mxfp8": MXFP8_BASELINE,
     "takum": TAKUM_UNIFORM,
     "takum8": TAKUM_AGGRESSIVE,
+    "takum_guarded": TAKUM_GUARDED,
 }

@@ -21,8 +21,8 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import ofp8
-from repro.core.formats import wire_format
+from repro.core import ofp8, telemetry
+from repro.core.formats import count_specials, wire_format
 from repro.core.takum import takum_decode, takum_encode_sr
 from . import blockscale
 from .policy import FORMAT_BITS, takum_width
@@ -88,6 +88,23 @@ def _pow2_scale(x):
     return jnp.exp2(e).astype(jnp.float32)
 
 
+def _emit_health(q: QTensor) -> QTensor:
+    """Per-tensor special-value counter on the quantize surface (free unless
+    a :func:`repro.core.telemetry.capture` scope is active at trace time):
+    ``quant.specials.<fmt>`` counts the NaR/NaN/Inf/NaN-block codes a
+    quantise just produced — the cheapest early-warning that a surface is
+    overflowing or being fed poisoned values."""
+    if not telemetry.enabled():
+        return q
+    wf = wire_format(q.fmt)
+    if wf.name == "f32":
+        return q
+    payload = q.wire_payload() if wf.is_block_scaled else q.bits
+    telemetry.emit(f"quant.calls.{wf.name}", jnp.float32(1))
+    telemetry.emit(f"quant.specials.{wf.name}", count_specials(payload, wf.name))
+    return q
+
+
 def quantize(x, fmt: str, *, scaled: bool = False, sr_key=None) -> QTensor:
     """Quantise x into ``fmt``.  ``sr_key`` switches the takum/OFP8 RNE
     encode to stochastic rounding (ignored for the IEEE and block-scaled
@@ -102,13 +119,13 @@ def quantize(x, fmt: str, *, scaled: bool = False, sr_key=None) -> QTensor:
     if fmt == "f32":
         return QTensor(x.astype(jnp.float32), fmt)
     if fmt == "bf16":
-        return QTensor(x.astype(jnp.bfloat16), fmt)
+        return _emit_health(QTensor(x.astype(jnp.bfloat16), fmt))
     if wf.is_block_scaled:
         n = x.shape[-1]
         scales, bits = blockscale.block_quantize(
             blockscale.pad_block(x.astype(jnp.float32)), wf
         )
-        return QTensor(bits[..., :n], fmt, scales)
+        return _emit_health(QTensor(bits[..., :n], fmt, scales))
     scale = _pow2_scale(x) if scaled else None
     xs = (x / scale) if scale is not None else x
     xs = xs.astype(jnp.float32)
@@ -121,7 +138,7 @@ def quantize(x, fmt: str, *, scaled: bool = False, sr_key=None) -> QTensor:
         # bit-identical to takum_encode; branch-free packer for OFP8) — the
         # producer-side encode is the hot half of every requantise step
         bits = _lut().encode_jnp_fast(xs, fmt)
-    return QTensor(bits, fmt, scale)
+    return _emit_health(QTensor(bits, fmt, scale))
 
 
 def requantize(q: QTensor, x, *, sr_key=None) -> QTensor:

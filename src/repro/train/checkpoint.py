@@ -11,7 +11,17 @@ Layout (one directory per step):
 
 Design notes for the 1000+-node deployment this models (DESIGN.md):
   * writes go to ``step_X.tmp`` then ``os.rename`` — a crashed writer never
-    corrupts LATEST;
+    corrupts LATEST; file contents are fsync'd before the rename so the
+    pointer never outruns the data;
+  * every stored array carries a CRC32 in the meta (computed over the
+    *stored* bytes, i.e. after wire packing) plus its stored dtype/shape —
+    restore re-hashes and refuses corrupted bytes loudly
+    (:class:`CheckpointCorruptionError`) instead of decoding garbage bit
+    patterns into plausible-looking weights (DESIGN.md §8);
+  * restore validates the schema and the wire format by name before
+    touching any payload: an unregistered format, a missing meta key, or a
+    leaf-count mismatch against the restore target raises
+    :class:`CheckpointFormatError` naming expected vs found;
   * the writer runs on a background thread (training continues; ``wait()``
     joins before the next save or at shutdown);
   * wire compression (policy.checkpoint = 't16' / 'e4m3' / 'bf16' — any
@@ -29,13 +39,41 @@ import json
 import os
 import shutil
 import threading
+import zlib
 from typing import Any, Optional
 
 import jax
 import numpy as np
 
 from repro.core import takum_np
-from repro.core.formats import wire_format
+from repro.core.formats import WIRE_FORMATS, wire_format
+
+#: meta.json schema: 2 adds per-leaf CRC32 + stored dtype/shape.  Schema-1
+#: checkpoints (no "schema" key) restore without integrity verification.
+SCHEMA_VERSION = 2
+
+
+class CheckpointError(RuntimeError):
+    """Base class for checkpoint integrity failures."""
+
+
+class CheckpointCorruptionError(CheckpointError):
+    """Stored bytes do not match their recorded CRC32 / are unreadable."""
+
+
+class CheckpointFormatError(CheckpointError):
+    """Schema or wire-format mismatch between checkpoint and this build."""
+
+
+def _crc(a: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(a).tobytes()) & 0xFFFFFFFF
+
+
+def _fsync_write(path: str, data: str) -> None:
+    with open(path, "w") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
 
 
 class CheckpointManager:
@@ -90,17 +128,28 @@ class CheckpointManager:
                 else:
                     arrays[f"a{i}"] = a
                     meta_leaves.append({"takum": 0, "dtype": str(a.dtype)})
-            np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
-            with open(os.path.join(tmp, "meta.json"), "w") as f:
-                json.dump(
-                    {"step": step, "fmt": self.fmt, "num_leaves": len(host), "leaves": meta_leaves},
-                    f,
-                )
+            for i in range(len(host)):
+                # integrity record over the STORED bytes (post-packing):
+                # restore verifies before any decode touches them
+                a = arrays[f"a{i}"]
+                meta_leaves[i]["crc"] = _crc(a)
+                meta_leaves[i]["stored_dtype"] = str(a.dtype)
+                meta_leaves[i]["stored_shape"] = list(a.shape)
+            npz_path = os.path.join(tmp, "arrays.npz")
+            np.savez(npz_path, **arrays)
+            with open(npz_path, "rb+") as f:
+                os.fsync(f.fileno())
+            _fsync_write(
+                os.path.join(tmp, "meta.json"),
+                json.dumps({
+                    "schema": SCHEMA_VERSION, "step": step, "fmt": self.fmt,
+                    "num_leaves": len(host), "leaves": meta_leaves,
+                }),
+            )
             if os.path.exists(final):
                 shutil.rmtree(final)
             os.rename(tmp, final)
-            with open(os.path.join(self.dir, "LATEST.tmp"), "w") as f:
-                f.write(str(step))
+            _fsync_write(os.path.join(self.dir, "LATEST.tmp"), str(step))
             os.replace(os.path.join(self.dir, "LATEST.tmp"), os.path.join(self.dir, "LATEST"))
             self._gc()
 
@@ -141,15 +190,89 @@ class CheckpointManager:
 
         The caller re-places leaves onto its current mesh — restoring onto a
         different topology than the one that saved is supported by design.
+
+        Integrity (DESIGN.md §8): the meta schema, the named wire format and
+        the leaf count are validated *before* any payload is decoded, and
+        each stored array is re-hashed against its recorded CRC32.  Failures
+        raise :class:`CheckpointFormatError` / :class:`CheckpointCorruptionError`
+        with the expected-vs-found values — never a silent decode of garbage.
         """
         d = os.path.join(self.dir, f"step_{step:09d}")
-        with open(os.path.join(d, "meta.json")) as f:
-            meta = json.load(f)
-        z = np.load(os.path.join(d, "arrays.npz"))
+        if not os.path.isdir(d):
+            raise CheckpointCorruptionError(f"no checkpoint directory at {d}")
+        try:
+            with open(os.path.join(d, "meta.json")) as f:
+                meta = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            raise CheckpointCorruptionError(
+                f"unreadable meta.json in {d}: {e}"
+            ) from e
+        for key in ("step", "fmt", "num_leaves", "leaves"):
+            if key not in meta:
+                raise CheckpointFormatError(
+                    f"meta.json in {d} is missing required key {key!r} "
+                    f"(found keys: {sorted(meta)})"
+                )
+        schema = meta.get("schema", 1)
+        if schema > SCHEMA_VERSION:
+            raise CheckpointFormatError(
+                f"checkpoint {d} uses meta schema {schema}; this build "
+                f"supports <= {SCHEMA_VERSION}"
+            )
+        if meta["fmt"] not in WIRE_FORMATS:
+            raise CheckpointFormatError(
+                f"checkpoint {d} was saved in wire format {meta['fmt']!r}, "
+                f"which this build does not register "
+                f"(registered: {sorted(WIRE_FORMATS)})"
+            )
+        n_expect = jax.tree.flatten(example_tree)[1].num_leaves
+        if meta["num_leaves"] != len(meta["leaves"]):
+            raise CheckpointFormatError(
+                f"meta.json in {d} is inconsistent: num_leaves="
+                f"{meta['num_leaves']} but {len(meta['leaves'])} leaf records"
+            )
+        if meta["num_leaves"] != n_expect:
+            raise CheckpointFormatError(
+                f"checkpoint {d} holds {meta['num_leaves']} leaves but the "
+                f"restore target expects {n_expect} — saved/restored trees "
+                "do not match (wrong model config or policy?)"
+            )
+        try:
+            z = np.load(os.path.join(d, "arrays.npz"))
+        except Exception as e:  # OSError / zipfile.BadZipFile / ValueError
+            raise CheckpointCorruptionError(
+                f"unreadable arrays.npz in {d}: {e}"
+            ) from e
         leaves = []
         for i, info in enumerate(meta["leaves"]):
-            a = z[f"a{i}"]
+            if f"a{i}" not in z.files:
+                raise CheckpointCorruptionError(
+                    f"arrays.npz in {d} is missing leaf a{i} "
+                    f"(has {len(z.files)} arrays)"
+                )
+            try:
+                # npz reads are lazy: zip-level decompression errors
+                # (BadZipFile and friends) surface here, per member
+                a = z[f"a{i}"]
+            except Exception as e:
+                raise CheckpointCorruptionError(
+                    f"leaf a{i} in {d} is unreadable: {e}"
+                ) from e
+            if "crc" in info:
+                got = _crc(a)
+                if got != info["crc"]:
+                    raise CheckpointCorruptionError(
+                        f"leaf a{i} in {d} failed its integrity check: "
+                        f"stored CRC32 {info['crc']:#010x}, recomputed "
+                        f"{got:#010x} — bytes corrupted on disk"
+                    )
             if info.get("wire"):
+                if info["wire"] not in WIRE_FORMATS:
+                    raise CheckpointFormatError(
+                        f"leaf a{i} in {d} is packed as {info['wire']!r}, "
+                        f"which this build does not register "
+                        f"(registered: {sorted(WIRE_FORMATS)})"
+                    )
                 wf = wire_format(info["wire"])
                 if wf.is_block_scaled:
                     shape = tuple(info["shape"])

@@ -103,6 +103,35 @@ def test_alignment_errors_are_loud():
         takum_encode_2d(jnp.zeros((8, 31), jnp.float32), "mxe4m3")
 
 
+@pytest.mark.parametrize("fmt", MX_FMTS)
+def test_ops_dispatch_rejects_truncated_payloads(fmt):
+    """The `kernels.ops` dispatch layer validates block-scaled payloads
+    against the 33-byte group structure *before* any kernel or ref path
+    sees them: a truncated/misaligned payload previously sheared every
+    scale byte into the element lanes silently."""
+    from repro.kernels import ops
+
+    bad = jnp.zeros((4, 34), jnp.uint8)  # 34 = one byte past a whole group
+    empty = jnp.zeros((4, 0), jnp.uint8)
+    with pytest.raises(ValueError, match="truncated or misaligned"):
+        ops.decode(bad, fmt)
+    with pytest.raises(ValueError, match="truncated or misaligned"):
+        ops.decode(empty, fmt)
+    with pytest.raises(ValueError, match="truncated or misaligned"):
+        ops.matmul(jnp.zeros((2, 4), jnp.float32), bad, fmt)
+    with pytest.raises(ValueError, match="truncated or misaligned"):
+        ops.dual_matmul(jnp.zeros((2, 66), jnp.uint8), bad, fmt)
+    with pytest.raises(ValueError, match="truncated or misaligned"):
+        ops.decode_attention(
+            jnp.zeros((1, 2, 32), jnp.float32),
+            jnp.zeros((1, 1, 4, 33), jnp.uint8), bad[None], fmt,
+        )
+    with pytest.raises(ValueError, match="multiple of 32"):
+        ops.encode(jnp.zeros((4, 31), jnp.float32), fmt)
+    with pytest.raises(ValueError, match="multiple of 32"):
+        ops.encode(jnp.zeros((4, 0), jnp.float32), fmt)
+
+
 # ------------------------------------------------------- kernels vs refs
 
 

@@ -1,0 +1,452 @@
+"""Numeric-fault containment: injection harness, guards, degradation ladder.
+
+In-process tests cover the deterministic fault ops, the telemetry gating,
+and the KV-append health surface.  The ring/ladder behaviour needs real
+devices, so those tests run in subprocesses on an 8-fake-device mesh (same
+idiom as tests/test_dist.py).  The ``chaos`` tests are the CI chaos smoke:
+existing collective / pipeline / train paths under seeded fault injection,
+asserting the guards converge where the unguarded paths corrupt or diverge.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+pytest.importorskip("repro.dist.collectives")
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import telemetry
+from repro.core.formats import count_specials
+from repro.dist import faults
+from repro.quant.policy import GuardPolicy
+
+_SRC = os.path.join(os.path.dirname(__file__), "../src")
+
+
+def _run(child: str, timeout=500) -> dict:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = _SRC
+    res = subprocess.run(
+        [sys.executable, "-c", child], env=env, capture_output=True,
+        text=True, timeout=timeout,
+    )
+    assert res.returncode == 0, (res.stdout[-2000:], res.stderr[-3000:])
+    return json.loads(res.stdout.strip().splitlines()[-1])
+
+
+_PRE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import numpy as np
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+"""
+
+
+# ---------------------------------------------------------------------------
+# fault ops: determinism + semantics
+# ---------------------------------------------------------------------------
+
+
+def test_flip_bits_deterministic_single_bit():
+    key = jax.random.PRNGKey(3)
+    u = jnp.arange(4096, dtype=jnp.uint8).reshape(64, 64)
+    a = faults.flip_bits(u, key, 1.0)
+    b = faults.flip_bits(u, key, 1.0)
+    assert jnp.array_equal(a, b), "same key must give identical faults"
+    x = np.asarray(a) ^ np.asarray(u)
+    # rate=1.0: every byte hit, each hit flips exactly one bit
+    assert (np.unpackbits(x.reshape(-1)).reshape(-1, 8).sum(1) == 1).all()
+    c = faults.flip_bits(u, jax.random.PRNGKey(4), 1.0)
+    assert not jnp.array_equal(a, c), "different seed must differ"
+    assert jnp.array_equal(faults.flip_bits(u, key, 0.0), u)
+
+
+def test_flip_bits_float_payload_roundtrips_dtype():
+    key = jax.random.PRNGKey(0)
+    v = jnp.linspace(-2, 2, 32, dtype=jnp.float32)
+    out = faults.flip_bits(v, key, 0.5)
+    assert out.dtype == v.dtype and out.shape == v.shape
+    bf = v.astype(jnp.bfloat16)
+    assert faults.flip_bits(bf, key, 0.5).dtype == jnp.bfloat16
+
+
+def test_corrupt_payload_identity_outside_scope():
+    p = jnp.arange(66, dtype=jnp.uint8)
+    assert faults.corrupt_payload(p, "t8") is p
+    assert faults.corrupt_hop(p) is p
+    assert faults.poison_grads({"w": p}, jax.random.PRNGKey(0))["w"] is p
+
+
+def test_corrupt_payload_deterministic_per_scope():
+    cfg = faults.FaultConfig(seed=11, bit_flip_rate=0.3)
+    p = jnp.arange(256, dtype=jnp.uint8)
+    with faults.inject(cfg):
+        a = faults.corrupt_payload(p, "t8")
+    with faults.inject(cfg):
+        b = faults.corrupt_payload(p, "t8")
+    assert jnp.array_equal(a, b), "fresh scope must replay the same faults"
+    with faults.inject(faults.FaultConfig(seed=12, bit_flip_rate=0.3)):
+        c = faults.corrupt_payload(p, "t8")
+    assert not jnp.array_equal(a, c)
+
+
+def test_mx_scale_corruption_forces_nan_blocks():
+    payload = jnp.zeros(4 * 33, dtype=jnp.uint8)
+    cfg = faults.FaultConfig(seed=0, scale_nan_rate=1.0)
+    with faults.inject(cfg):
+        out = np.asarray(faults.corrupt_payload(payload, "mxe4m3"))
+    grp = out.reshape(4, 33)
+    assert (grp[:, 0] == 255).all(), "every scale byte forced to NaN (255)"
+    assert (grp[:, 1:] == 0).all(), "element bytes untouched"
+    # and the telemetry predicate sees every lane of every block as special
+    assert int(count_specials(jnp.asarray(out), "mxe4m3")) == 4 * 32
+
+
+def test_mx_element_flips_leave_scale_channel_alone():
+    payload = jnp.zeros(8 * 33, dtype=jnp.uint8)
+    cfg = faults.FaultConfig(seed=5, bit_flip_rate=1.0)
+    with faults.inject(cfg):
+        out = np.asarray(faults.corrupt_payload(payload, "mxe4m3"))
+    grp = out.reshape(8, 33)
+    assert (grp[:, 0] == 0).all(), "scale bytes have their own fault channel"
+    assert (grp[:, 1:] != 0).any()
+
+
+def test_poison_grads_rate_and_determinism():
+    cfg = faults.FaultConfig(seed=2, grad_poison_rate=1.0, poison_frac=0.25)
+    g = {"a": jnp.ones((64, 64)), "b": jnp.ones(128)}
+    key = jax.random.PRNGKey(9)
+    with faults.inject(cfg):
+        p1 = faults.poison_grads(g, key)
+        p2 = faults.poison_grads(g, key)
+    frac = float(jnp.isnan(p1["a"]).mean())
+    assert 0.15 < frac < 0.35, frac
+    assert jnp.array_equal(
+        jnp.isnan(p1["a"]), jnp.isnan(p2["a"])
+    ), "same key => same poison pattern"
+    with faults.inject(faults.FaultConfig(seed=2, grad_poison_rate=0.0)):
+        assert not jnp.isnan(faults.poison_grads(g, key)["a"]).any()
+
+
+# ---------------------------------------------------------------------------
+# guard policy + telemetry plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_guard_policy_validates_ladder():
+    with pytest.raises(AssertionError):
+        GuardPolicy(ladder=("t16", "t8"))  # narrowing: not a degradation
+    with pytest.raises(KeyError):
+        GuardPolicy(ladder=("t8", "nope"))
+    g = GuardPolicy()
+    assert g.ladder_from("t8") == ("t8", "t16", "bf16", "f32")
+    # bf16 is not strictly wider than t16 -> skipped: a rung must widen
+    assert g.ladder_from("t16") == ("t16", "f32")
+    assert g.ladder_from("f32") == ("f32",)
+    # a base outside the ladder still gets every strictly wider rung
+    assert g.ladder_from("e4m3") == ("e4m3", "t16", "bf16", "f32")
+
+
+def test_telemetry_capture_gates_at_trace_time():
+    telemetry.reset()
+
+    def make():
+        # fresh function object per trace: jax.jit caches traces on
+        # function identity, and the gate is a trace-time decision
+        def fn(x):
+            telemetry.emit("t.x", jnp.sum(x))
+            return x + 1
+
+        return fn
+
+    # traced OUTSIDE a capture: no callback in the trace, nothing recorded
+    jax.jit(make())(jnp.ones(4)).block_until_ready()
+    assert "t.x" not in telemetry.counters()
+
+    with telemetry.capture() as ctrs:
+        g = jax.jit(make())  # fresh trace inside the scope
+        g(jnp.ones(4)).block_until_ready()
+        g(jnp.ones(4)).block_until_ready()
+        jax.effects_barrier()
+    assert ctrs["t.x"] == 8.0
+    # values arriving after the scope closes are dropped
+    assert telemetry.counters().get("t.x", 0) == 8.0
+
+
+def test_kv_append_chaos_shows_in_telemetry():
+    from repro import configs
+    from repro.models import transformer as T
+    from repro.quant.policy import QuantPolicy
+
+    # mx cache + forced NaN scale bytes: every block deterministically special
+    cfg = configs.get_smoke("llama3_8b").with_(
+        quant=QuantPolicy(kv_cache="mxe4m3"))
+    kv = jax.random.normal(jax.random.PRNGKey(0), (2, 4, 8, 1, 16))
+    fcfg = faults.FaultConfig(seed=1, scale_nan_rate=1.0)
+    with telemetry.capture() as ctrs, faults.inject(fcfg):
+        jax.block_until_ready(T._encode_cache(cfg, kv))
+        jax.effects_barrier()
+    assert ctrs["kv.appends.mxe4m3"] == 1.0
+    # hd=16 pads to one 32-block per vector; all 2*4*8*1 blocks forced NaN
+    assert ctrs["kv.specials.mxe4m3"] == 2 * 4 * 8 * 1 * 32
+    # clean append, counters still live: zero specials
+    with telemetry.capture() as ctrs2:
+        jax.block_until_ready(T._encode_cache(cfg, kv))
+        jax.effects_barrier()
+    assert ctrs2["kv.specials.mxe4m3"] == 0.0
+
+
+def test_quantize_health_counter():
+    from repro.quant.qtensor import quantize
+
+    x = jnp.concatenate([jnp.ones(31), jnp.array([jnp.nan])])
+    with telemetry.capture() as ctrs:
+        jax.block_until_ready(quantize(x, "t8").bits)
+        jax.effects_barrier()
+    assert ctrs["quant.specials.t8"] == 1.0  # the NaN encodes to NaR
+    assert ctrs["quant.calls.t8"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# ring-level guards (subprocess: needs a real multi-device mesh)
+# ---------------------------------------------------------------------------
+
+
+def test_degraded_psum_ladder_chaos():
+    out = _run(_PRE + """
+from repro.dist.collectives import compressed_psum, degraded_psum
+from repro.dist import faults
+from repro.core import telemetry
+from repro.quant.policy import GuardPolicy
+
+mesh = jax.make_mesh((4, 2), ("pod", "x"))
+rng = np.random.default_rng(0)
+x = jnp.asarray(rng.standard_normal((4, 2, 64)).astype(np.float32))
+exact = np.asarray(jnp.sum(x, axis=0))
+
+def run(g, xs, fmt="t8"):
+    f = jax.jit(jax.shard_map(lambda v: degraded_psum(v, "pod", fmt, g),
+                mesh=mesh, in_specs=P("pod", None, None),
+                out_specs=P("pod", None, None)))
+    return np.asarray(f(xs))
+
+res = {}
+# 1. clean inputs, default bounds: stays on the base rung
+with telemetry.capture() as c1:
+    o = run(GuardPolicy(), x)
+res["clean_err"] = float(np.abs(o[0] - exact).max())
+res["clean_escalated"] = c1["wire.escalated"]
+res["clean_rung_t8"] = c1.get("wire.rung.t8", 0)
+
+# 2. tight rel-err bound: t8 must trip, t16 absorbs
+with telemetry.capture() as c2:
+    o2 = run(GuardPolicy(max_rel_err=0.005), x)
+res["tight_err"] = float(np.abs(o2[0] - exact).max())
+res["tight_escalated"] = c2["wire.escalated"]
+res["tight_rung_t16"] = c2.get("wire.rung.t16", 0)
+
+# 3. poisoned input lanes: contained at the door, result finite
+xp = x.at[0, 0, :4].set(jnp.nan)
+with telemetry.capture() as c3:
+    o3 = run(GuardPolicy(), xp)
+res["poison_finite"] = bool(np.isfinite(o3).all())
+res["poison_specials_in"] = c3["wire.specials_in"]
+
+# 4. chaos: wire byte flips + garbled hops; guarded converges (the
+#    corrupted payload trips every narrow rung -> f32 refuge), the
+#    unguarded ring sums garbage
+fcfg = faults.FaultConfig(seed=7, bit_flip_rate=5e-2, hop_garble_rate=1.0)
+with faults.inject(fcfg), telemetry.capture() as c4:
+    og = run(GuardPolicy(), x)
+    fu = jax.jit(jax.shard_map(lambda v: compressed_psum(v, "pod", "t8"),
+                 mesh=mesh, in_specs=P("pod", None, None),
+                 out_specs=P("pod", None, None)))
+    ou = np.asarray(fu(x))
+res["chaos_guard_err"] = float(np.abs(og[0] - exact).max())
+res["chaos_unguard_err"] = float(np.abs(np.nan_to_num(ou[0], nan=np.inf) - exact).max())
+res["chaos_escalated"] = c4["wire.escalated"]
+print(json.dumps(res))
+""")
+    assert out["clean_escalated"] == 0 and out["clean_rung_t8"] == 8, out
+    assert out["clean_err"] < 0.5, out
+    assert out["tight_escalated"] == 8 and out["tight_rung_t16"] == 8, out
+    assert out["tight_err"] < out["clean_err"] / 10, out
+    assert out["poison_finite"] and out["poison_specials_in"] > 0, out
+    assert out["chaos_escalated"] > 0, out
+    assert out["chaos_guard_err"] < 1e-3, out  # escalates to the f32 refuge
+    assert out["chaos_unguard_err"] > 1e3, out  # corrupted t8 terms are huge
+
+
+def test_ef_guarded_residuals_track_transmitted_format():
+    out = _run(_PRE + """
+from repro.dist.error_feedback import ef_compressed_psum
+from repro.dist import faults
+from repro.core import telemetry
+from repro.quant.policy import GuardPolicy
+
+mesh = jax.make_mesh((8,), ("pod",))
+rng = np.random.default_rng(1)
+g = jnp.asarray(rng.standard_normal((8, 128)).astype(np.float32))
+e0 = jnp.zeros_like(g)
+exact = np.asarray(jnp.sum(g, axis=0))
+
+def run(guard):
+    f = jax.jit(jax.shard_map(
+        lambda gv, ev: ef_compressed_psum(gv, ev, "pod", "t8", guard=guard),
+        mesh=mesh, in_specs=(P("pod"), P("pod")), out_specs=(P("pod"), P("pod"))))
+    return f(g, e0)
+
+res = {}
+# tight bound: every hop escalates t8 -> t16; the residual must be the
+# (much smaller) t16 residual, not a stale t8-sized one
+r8, e8 = run(GuardPolicy(ladder=("t8", "f32"), max_rel_err=1e9))  # never trips
+with telemetry.capture() as c:
+    r16, e16 = run(GuardPolicy(max_rel_err=0.005))  # always trips to t16
+res["rms_err_t8"] = float(jnp.sqrt(jnp.mean(e8 ** 2)))
+res["rms_err_t16"] = float(jnp.sqrt(jnp.mean(e16 ** 2)))
+res["escalated"] = c["ef.escalated"]
+res["err_red"] = float(np.abs(np.asarray(r16)[0] - exact).max())
+
+# f32 refuge: exact transmission => identically zero residual
+rf, ef_ = run(GuardPolicy(max_rel_err=0.0))  # trips every rung to f32
+res["f32_resid"] = float(jnp.abs(ef_).max())
+res["f32_err"] = float(np.abs(np.asarray(rf)[0] - exact).max())
+
+# poisoned c = g + err lanes are contained, outputs stay finite
+gp = g.at[0, :3].set(jnp.inf)
+fp = jax.jit(jax.shard_map(
+    lambda gv, ev: ef_compressed_psum(gv, ev, "pod", "t8", guard=GuardPolicy()),
+    mesh=mesh, in_specs=(P("pod"), P("pod")), out_specs=(P("pod"), P("pod"))))
+rp, ep = fp(gp, e0)
+res["poison_finite"] = bool(jnp.isfinite(rp).all() and jnp.isfinite(ep).all())
+print(json.dumps(res))
+""")
+    assert out["escalated"] == 8, out
+    assert out["rms_err_t16"] < out["rms_err_t8"] / 10, (
+        "escalated hop must carry the escalated format's residual", out)
+    assert out["err_red"] < 0.05, out
+    assert out["f32_resid"] == 0.0 and out["f32_err"] < 1e-5, out
+    assert out["poison_finite"], out
+
+
+def test_pipeline_guarded_hops_chaos():
+    out = _run(_PRE + """
+from repro.dist.pipeline import pipeline_apply
+from repro.dist import faults
+from repro.core import telemetry
+from repro.quant.policy import GuardPolicy
+
+mesh = jax.make_mesh((4, 2), ("pipe", "x"))
+P_st, M, mb, d = 4, 6, 3, 16
+rng = np.random.default_rng(0)
+ws = jnp.asarray(rng.standard_normal((P_st, d, d)).astype(np.float32)) * 0.5
+x = jnp.asarray(rng.standard_normal((M, mb, d)).astype(np.float32))
+
+def stage(w, h):
+    return jnp.tanh(h @ w)
+
+ref = np.asarray(pipeline_apply(stage, ws, x, mesh=mesh, axis="pipe"))
+rms = float(np.sqrt(np.mean(ref ** 2)))
+res = {}
+
+# guarded t8 hops, clean: behaves like plain t8 hops (no escalation)
+with telemetry.capture() as c0:
+    g0 = np.asarray(pipeline_apply(stage, ws, x, mesh=mesh, axis="pipe",
+                                   wire_fmt="t8", guard=GuardPolicy()))
+res["clean_rel"] = float(np.abs(g0 - ref).max() / rms)
+res["clean_esc"] = c0.get("pipe.escalated", 0.0)
+
+# tight bound: every tick escalates one rung (t8 -> t16): tighter output
+with telemetry.capture() as c1:
+    g1 = np.asarray(pipeline_apply(stage, ws, x, mesh=mesh, axis="pipe",
+                                   wire_fmt="t8",
+                                   guard=GuardPolicy(max_rel_err=0.001)))
+res["esc_rel"] = float(np.abs(g1 - ref).max() / rms)
+res["esc_count"] = c1["pipe.escalated"]
+
+# chaos: dropped + garbled hops; the guard contains what arrives
+fcfg = faults.FaultConfig(seed=3, bit_flip_rate=0.01, hop_drop_rate=0.1,
+                          hop_garble_rate=0.3)
+with faults.inject(fcfg), telemetry.capture() as c2:
+    g2 = np.asarray(pipeline_apply(stage, ws, x, mesh=mesh, axis="pipe",
+                                   wire_fmt="t8", guard=GuardPolicy()))
+res["chaos_finite"] = bool(np.isfinite(g2).all())
+print(json.dumps(res))
+""")
+    assert out["clean_rel"] < 0.5 and out["clean_esc"] == 0, out
+    assert out["esc_count"] > 0 and out["esc_rel"] < out["clean_rel"], out
+    assert out["chaos_finite"], out
+
+
+def test_chaos_train_step_guards_on_vs_off():
+    """The acceptance chaos run: a 4-pod compressed train step under 1e-3
+    payload byte corruption plus poisoned-gradient microbatches.  Guarded
+    (takum_guarded policy): every step's loss stays finite, the wire
+    demonstrably escalates the ladder, poisoned microbatches are skipped
+    with params held.  Unguarded (same wire, no guard): the same faults
+    blow the parameters up — non-finite or wildly diverged loss."""
+    out = _run(_PRE + """
+from repro import configs
+from repro.dist import sharding as shd, step as dstep, faults
+from repro.core import telemetry
+from repro.models import transformer as T
+from repro.optim import adamw_init
+from repro.data import SyntheticLM
+from repro.quant.policy import GuardPolicy, QuantPolicy
+
+guarded = QuantPolicy(grad_comm="t8", opt_state="t16", guard=GuardPolicy())
+unguarded = QuantPolicy(grad_comm="t8", opt_state="t16")
+mesh = jax.make_mesh((4, 2, 1), ("pod", "data", "model"))
+fcfg = faults.FaultConfig(seed=0, bit_flip_rate=1e-3, grad_poison_rate=0.5,
+                          poison_frac=1e-3)
+
+def losses(policy, n=3):
+    cfg = configs.get_smoke("llama3_8b").with_(quant=policy)
+    pipe = SyntheticLM(cfg.vocab_size, 32, 8, seed=5)
+    batch = pipe.batch(0)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    state = dstep.TrainState(params=params,
+                             opt=adamw_init(params, fmt=cfg.quant.opt_state),
+                             rng=jax.random.PRNGKey(1))
+    specs = dstep.train_state_specs_nopod(cfg, mesh)
+    bspec = shd.batch_specs(cfg, mesh, kind="train", batch=8)
+    state = jax.device_put(state, shd.named(mesh, specs))
+    batch = jax.device_put(batch, shd.named(mesh, bspec))
+    step = jax.jit(dstep.make_train_step(cfg, mesh))
+    ls = []
+    for _ in range(n):
+        state, m = step(state, batch)
+        ls.append(float(m["loss"]))
+    return ls
+
+with faults.inject(fcfg), telemetry.capture() as ctrs:
+    guarded_losses = losses(guarded)
+with faults.inject(fcfg):
+    unguarded_losses = losses(unguarded)
+
+print(json.dumps({
+    "guarded": guarded_losses,
+    "unguarded": unguarded_losses,
+    "escalated": ctrs.get("wire.escalated", 0.0),
+    "rung_f32": ctrs.get("wire.rung.f32", 0.0),
+    "skipped": ctrs.get("step.skipped", 0.0),
+    "calls": ctrs.get("step.calls", 0.0),
+}))
+""", timeout=560)
+    assert all(np.isfinite(l) for l in out["guarded"]), out
+    # the corrupted t8 payload trips the health check: >= 1 ladder hop taken
+    assert out["escalated"] > 0, out
+    # poisoned microbatches were detected and the update skipped
+    assert out["skipped"] >= 1, out
+    assert out["calls"] == 3, out
+    # guards off, same faults: divergence or NaN within 3 steps
+    bad = out["unguarded"][-1]
+    assert (not np.isfinite(bad)) or bad > 2 * max(out["guarded"]), out

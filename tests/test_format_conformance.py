@@ -249,6 +249,76 @@ def test_jnp_codec_agrees_with_f64_oracle(fmt, a, b):
     assert _value_eq(dec_j, dec_n), fmt
 
 
+# ------------------------------------------- special-census == f64 oracle
+
+
+def _random_payload(wf, rng, n):
+    """A uniformly random wire payload: every bit pattern is fair game —
+    including NaR/NaN/Inf codes and (for mx) the 255 NaN-scale byte."""
+    if wf.is_block_scaled:
+        nb = -(-n // 32)
+        return rng.integers(0, 256, size=nb * 33, dtype=np.uint8)
+    info = np.iinfo(wf.np_storage)
+    return rng.integers(0, int(info.max) + 1, size=n, dtype=wf.np_storage)
+
+
+def _oracle_special_count(wf, payload: np.ndarray) -> int:
+    """Brute force: decode through the float64 numpy oracle and count the
+    lanes that are not finite.  This is the semantics ``count_specials``'
+    bit predicates must reproduce without decoding."""
+    with np.errstate(invalid="ignore", over="ignore"):
+        if wf.is_block_scaled:
+            vals = wf.decode_np(payload.astype(np.uint8))
+        elif wf.family == "takum":
+            vals = wf.decode_np(payload.astype(np.uint64))  # shifted fields
+        else:
+            vals = wf.decode_np(payload.astype(wf.np_storage))
+        return int((~np.isfinite(np.asarray(vals, np.float64))).sum())
+
+
+@pytest.mark.parametrize("fmt", [f for f in ALL_FMTS if f != "f32"] + ["f32"])
+def test_count_specials_matches_f64_oracle_scan(fmt):
+    """``count_specials(payload, fmt) == #{~isfinite(decode_np(payload))}``
+    on random payloads, for every registered format.
+
+    The health guards (quant/KV/collective surfaces) threshold on this
+    census *without* decoding — a predicate/oracle disagreement would make
+    the degradation ladder blind to exactly the codes it exists to catch.
+    Random payloads cover the space; the crafted tails pin the codes that
+    matter (NaR, all NaN/Inf encodings, the mx NaN-scale byte) even when
+    the random draw misses them.
+    """
+    from repro.core.formats import count_specials
+
+    wf = wire_format(fmt)
+    rng = np.random.default_rng(hash(fmt) % 2**32)
+    for n in (32, 64, 256, 1024):
+        payload = _random_payload(wf, rng, n)
+        got = int(count_specials(jnp.asarray(payload), fmt))
+        want = _oracle_special_count(wf, payload)
+        assert got == want, (fmt, n, got, want)
+
+    # crafted: encode a vector that *contains* every special the family has
+    specials = np.asarray(
+        [np.nan, np.inf, -np.inf, 1.0, -2.5, 0.0] + [3.0] * 26, np.float64
+    )
+    if wf.is_block_scaled:
+        crafted = np.asarray(wf.encode_np(specials))
+        # plus a forced NaN-scale block: all 32 lanes special
+        forced = crafted.copy()
+        forced[0] = 255
+        for p, floor in ((crafted, 3), (forced, 32)):
+            got = int(count_specials(jnp.asarray(p), fmt))
+            assert got == _oracle_special_count(wf, p) and got >= floor, fmt
+    else:
+        crafted = np.asarray(wf.encode_np(specials)).astype(wf.np_storage)
+        got = int(count_specials(jnp.asarray(crafted), fmt))
+        want = _oracle_special_count(wf, crafted)
+        # takum/e4m3 collapse all three to NaR/NaN (>=1 code); e5m2/bf16/f32
+        # keep signed infinities distinct (3 codes)
+        assert got == want and want >= (3 if wf.special == "inf" else 1), fmt
+
+
 # ----------------------------------------------------------- registry edge
 
 

@@ -1,0 +1,146 @@
+"""NaN/Inf propagation through the fused ``out_fmt=`` encode epilogues.
+
+The producer kernels (``matmul`` / ``dual_matmul`` / ``decode_attention``)
+can encode their output inside the kernel epilogue.  A poisoned input must
+come out the other side as the *output family's own* special code — takum
+NaR, E4M3 NaN, E5M2/bf16 Inf-or-NaN, an mx NaN-scale block — and the fused
+payload must stay bit-for-bit ``encode(unfused_output)``: the epilogue may
+never "launder" a special into a plausible finite code (that is exactly the
+failure mode the wire-health telemetry thresholds on, DESIGN.md §8).
+
+Runs at the :mod:`repro.kernels.ops` dispatch layer so every registered
+format is exercised on whichever path (Pallas kernel or jnp reference)
+dispatch actually routes it to.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+pytest.importorskip("repro.kernels.ops")
+
+import jax.numpy as jnp
+
+from repro.core.formats import kernel_wire_names, wire_format
+from repro.kernels import ops
+
+#: every fusable epilogue target (all registered narrow formats, the
+#: block-scaled containers included) — f32 is the unfused case and t32 has
+#: no kernel codec (covered by the ref-fallback test at the bottom)
+OUT_FMTS = tuple(sorted(kernel_wire_names()))
+IN_FMTS = ("t8", "e4m3")
+
+
+def _rand(shape, scale, seed):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+def _decode(bits, fmt):
+    return np.asarray(ops.decode(bits, fmt))
+
+
+def _assert_family_special(y: np.ndarray, wf) -> None:
+    """Every lane of ``y`` (a decoded poisoned region) carries the output
+    family's special semantics: nothing finite survived."""
+    assert not np.isfinite(y).any(), (wf.name, y)
+    if wf.special in ("nar", "nan") or wf.is_block_scaled:
+        # takum NaR / E4M3 NaN / mx NaN-block: no infinities exist
+        assert np.isnan(y).all(), (wf.name, y)
+
+
+@pytest.mark.parametrize("out_fmt", OUT_FMTS)
+@pytest.mark.parametrize("fmt", IN_FMTS)
+def test_matmul_fused_epilogue_propagates_specials(fmt, out_fmt):
+    M, K, N = 8, 48, 64  # N: whole mx blocks so ops.encode accepts f32 rows
+    x = jnp.asarray(_rand((M, K), 0.1, seed=1))
+    x = x.at[0, 0].set(jnp.nan).at[1, 1].set(jnp.inf)
+    wb = ops.encode(jnp.asarray(_rand((K, N), 0.1, seed=2)), fmt)
+
+    fused = ops.matmul(x, wb, fmt, out_fmt=out_fmt)
+    unfused = ops.matmul(x, wb, fmt)
+    # the epilogue is pure encode: bit-for-bit the unfused output's encoding
+    np.testing.assert_array_equal(
+        np.asarray(fused), np.asarray(ops.encode(unfused, out_fmt))
+    )
+    y = _decode(fused, out_fmt)
+    wf = wire_format(out_fmt)
+    _assert_family_special(y[:2], wf)  # NaN and Inf rows both all-special
+    assert np.isfinite(y[2:]).all(), (fmt, out_fmt)  # clean rows untouched
+
+
+@pytest.mark.parametrize("out_fmt", OUT_FMTS)
+@pytest.mark.parametrize("fmt", ("t8", "t16"))
+def test_dual_matmul_fused_epilogue_propagates_specials(fmt, out_fmt):
+    M, K, N = 8, 64, 32
+    x = np.asarray(_rand((M, K), 0.3, seed=3))
+    x[0, 0], x[1, 1] = np.nan, np.inf  # encode maps these to the in-family
+    xb = ops.encode(jnp.asarray(x), fmt)  # specials (NaR here): bits-in path
+    wb = ops.encode(jnp.asarray(_rand((K, N), 0.3, seed=4)), fmt)
+
+    fused = ops.dual_matmul(xb, wb, fmt, out_fmt=out_fmt)
+    unfused = ops.dual_matmul(xb, wb, fmt)
+    np.testing.assert_array_equal(
+        np.asarray(fused), np.asarray(ops.encode(unfused, out_fmt))
+    )
+    y = _decode(fused, out_fmt)
+    _assert_family_special(y[:2], wire_format(out_fmt))
+    assert np.isfinite(y[2:]).all(), (fmt, out_fmt)
+
+
+@pytest.mark.parametrize("out_fmt", OUT_FMTS)
+@pytest.mark.parametrize("fmt", ("t8", "t16"))
+def test_attention_fused_epilogue_propagates_specials(fmt, out_fmt):
+    B, H, Hkv, S, d = 1, 4, 2, 40, 32
+    q = jnp.asarray(_rand((B, H, d), 1.0, seed=5))
+    q = q.at[0, 0, 0].set(jnp.nan)  # head 0's scores are all NaN
+    kb = ops.encode(jnp.asarray(_rand((B, Hkv, S, d), 1.0, seed=6)), fmt)
+    vb = ops.encode(jnp.asarray(_rand((B, Hkv, S, d), 1.0, seed=7)), fmt)
+
+    fused = ops.decode_attention(q, kb, vb, fmt, out_fmt=out_fmt)
+    unfused = ops.decode_attention(q, kb, vb, fmt)
+    np.testing.assert_array_equal(
+        np.asarray(fused), np.asarray(ops.encode(unfused, out_fmt))
+    )
+    y = _decode(fused, out_fmt)
+    _assert_family_special(y[0, 0], wire_format(out_fmt))
+    assert np.isfinite(y[0, 1:]).all(), (fmt, out_fmt)  # other heads clean
+
+
+@pytest.mark.parametrize("out_fmt", ("t8", "e4m3", "e5m2", "bf16"))
+def test_overflow_maps_to_family_semantics(out_fmt):
+    """A finite f32 product beyond the output format's range takes the
+    family's documented route: takum saturates finite, E4M3 overflows to
+    NaN, E5M2/bf16 overflow to Inf — through the fused epilogue exactly as
+    through a plain encode."""
+    M, K, N = 4, 16, 32
+    x = jnp.full((M, K), 50.0, jnp.float32)
+    wb = ops.encode(jnp.full((K, N), 50.0, jnp.float32), "t16")
+    fused = ops.matmul(x, wb, "t16", out_fmt=out_fmt)  # products ~4e4
+    np.testing.assert_array_equal(
+        np.asarray(fused),
+        np.asarray(ops.encode(ops.matmul(x, wb, "t16"), out_fmt)),
+    )
+    y = _decode(fused, out_fmt)
+    wf = wire_format(out_fmt)
+    if wf.family == "takum":
+        assert np.isfinite(y).all() and (y > 0).all(), y
+    elif wf.special == "nan":  # e4m3: no Inf, overflow is NaN
+        assert np.isnan(y).all(), y
+    else:  # e5m2 overflows at 57344; bf16 holds 4e4 exactly-ish
+        assert (~np.isfinite(y) | (y > 1e4)).all(), y
+
+
+def test_t32_out_fmt_rides_the_ref_fallback():
+    """t32 has no kernel codec: the dispatch layer must still honour
+    ``out_fmt='t32'`` (exact ref fused path), specials included."""
+    x = jnp.asarray(_rand((4, 24), 0.2, seed=8)).at[0, 0].set(jnp.nan)
+    wb = ops.encode(jnp.asarray(_rand((24, 8), 0.2, seed=9)), "t8")
+    fused = ops.matmul(x, wb, "t8", out_fmt="t32")
+    np.testing.assert_array_equal(
+        np.asarray(fused),
+        np.asarray(ops.encode(ops.matmul(x, wb, "t8"), "t32")),
+    )
+    y = _decode(fused, "t32")
+    assert np.isnan(y[0]).all() and np.isfinite(y[1:]).all()

@@ -111,6 +111,121 @@ def test_checkpoint_gc_and_async(tmp_path):
     assert sorted(mgr.all_steps()) == [3, 4]
 
 
+# ------------------------------------------------------ checkpoint integrity
+
+
+def _saved(tmp_path, fmt="t16"):
+    """A freshly saved checkpoint + its on-disk paths (DESIGN.md §8)."""
+    import json
+
+    mgr = CheckpointManager(str(tmp_path), fmt=fmt, keep=3)
+    tree = {
+        "w": jnp.asarray(
+            np.random.default_rng(1).standard_normal((16, 16)), jnp.float32
+        ),
+        "b": jnp.ones((5,), jnp.float32),
+    }
+    mgr.save(11, tree, blocking=True)
+    d = os.path.join(str(tmp_path), "step_000000011")
+    meta_path = os.path.join(d, "meta.json")
+    with open(meta_path) as f:
+        meta = json.load(f)
+    return mgr, tree, d, meta_path, meta
+
+
+def _rewrite_meta(meta_path, meta):
+    import json
+
+    with open(meta_path, "w") as f:
+        json.dump(meta, f)
+
+
+def test_checkpoint_corrupted_bytes_refused(tmp_path):
+    """A flipped payload byte on disk must raise, not decode into
+    plausible-looking weights."""
+    from repro.train.checkpoint import CheckpointCorruptionError
+
+    mgr, tree, d, _, _ = _saved(tmp_path)
+    npz = os.path.join(d, "arrays.npz")
+    blob = bytearray(open(npz, "rb").read())
+    blob[len(blob) // 2] ^= 0x40  # one bit, mid-payload
+    with open(npz, "wb") as f:
+        f.write(bytes(blob))
+    # depending on where the flip lands it fails our CRC record, the zip
+    # member CRC, or the zip directory parse — all must land on the same
+    # loud refusal, never a silent decode
+    with pytest.raises(CheckpointCorruptionError, match="CRC|unreadable"):
+        mgr.restore(11, tree)
+
+
+def test_checkpoint_unregistered_format_refused(tmp_path):
+    from repro.train.checkpoint import CheckpointFormatError
+
+    mgr, tree, d, meta_path, meta = _saved(tmp_path)
+    meta["fmt"] = "posit16"  # a format this build does not register
+    _rewrite_meta(meta_path, meta)
+    with pytest.raises(CheckpointFormatError, match="posit16"):
+        mgr.restore(11, tree)
+
+
+def test_checkpoint_leaf_count_mismatch_named(tmp_path):
+    from repro.train.checkpoint import CheckpointFormatError
+
+    mgr, tree, *_ = _saved(tmp_path)
+    bigger = {**tree, "extra": jnp.zeros((2,), jnp.float32)}
+    with pytest.raises(CheckpointFormatError, match="2 leaves.*expects 3"):
+        mgr.restore(11, bigger)
+
+
+def test_checkpoint_missing_meta_key_and_future_schema(tmp_path):
+    from repro.train.checkpoint import CheckpointFormatError
+
+    mgr, tree, d, meta_path, meta = _saved(tmp_path)
+    future = dict(meta, schema=99)
+    _rewrite_meta(meta_path, future)
+    with pytest.raises(CheckpointFormatError, match="schema 99"):
+        mgr.restore(11, tree)
+    broken = {k: v for k, v in meta.items() if k != "fmt"}
+    _rewrite_meta(meta_path, broken)
+    with pytest.raises(CheckpointFormatError, match="'fmt'"):
+        mgr.restore(11, tree)
+
+
+def test_checkpoint_unreadable_meta_refused(tmp_path):
+    from repro.train.checkpoint import CheckpointCorruptionError
+
+    mgr, tree, d, meta_path, _ = _saved(tmp_path)
+    with open(meta_path, "w") as f:
+        f.write("{not json")
+    with pytest.raises(CheckpointCorruptionError, match="meta.json"):
+        mgr.restore(11, tree)
+    with pytest.raises(CheckpointCorruptionError, match="no checkpoint"):
+        mgr.restore(404, tree)
+
+
+def test_checkpoint_schema1_restores_without_crcs(tmp_path):
+    """Old (pre-integrity) checkpoints: no 'schema'/'crc' keys — must still
+    restore (no verification possible, but no spurious refusal either)."""
+    mgr, tree, d, meta_path, meta = _saved(tmp_path)
+    meta.pop("schema")
+    for leaf in meta["leaves"]:
+        leaf.pop("crc", None)
+        leaf.pop("stored_dtype", None)
+        leaf.pop("stored_shape", None)
+    _rewrite_meta(meta_path, meta)
+    back = mgr.restore(11, tree)
+    np.testing.assert_allclose(np.asarray(tree["w"]), back["w"], rtol=2e-3)
+
+
+def test_checkpoint_no_tmp_dirs_after_save(tmp_path):
+    """Atomic write-then-rename: a completed save leaves no *.tmp litter and
+    LATEST always points at a fully-renamed directory."""
+    mgr, tree, d, *_ = _saved(tmp_path)
+    names = os.listdir(str(tmp_path))
+    assert not [n for n in names if n.endswith(".tmp")], names
+    assert mgr.latest_step() == 11 and os.path.isdir(d)
+
+
 def test_trainloop_resume_bitexact(tmp_path):
     """Crash at step 7, restart, and the final state must equal an
     uninterrupted run (deterministic data + checkpointed state)."""
