@@ -10,9 +10,21 @@ e4m3/e5m2 vs bf16), so the JSON records the paper's takum-vs-zoo deltas on
 identical kernels — and (c) the analytic HBM-traffic model per format (the
 roofline memory-term input).
 
+Timing (schema v6, the offline half of ``repro.obs`` — DESIGN.md §9): every
+section contributes *row specs*, and one harness interleaves the timed
+repetitions round-robin across **all** rows — rep pass 1 visits every row
+once, then pass 2, ... — so a sustained container-noise window is charged
+to every row equally instead of falling entirely on whichever row it
+happened to cover (the failure mode of per-row rep loops).  Each throughput
+row reports the median of its per-rep samples with a seeded-bootstrap
+confidence interval (``stats`` = {median, ci_lo, ci_hi, reps};
+:mod:`repro.obs.stats`), which is what ``benchmarks/compare.py``'s
+CI-overlap regression gate consumes.
+
 ``--json`` writes ``BENCH_kernels.json`` at the repo root: the perf
 trajectory baseline every future perf PR is judged against.  ``--smoke``
-shrinks sizes/reps for CI.
+shrinks sizes/reps for CI and writes under ``benchmarks/results/`` (never
+clobbering the committed baseline).
 
     PYTHONPATH=src python -m benchmarks.kernel_bench [--smoke] [--json]
 """
@@ -29,6 +41,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core import telemetry
 from repro.core.formats import kernel_wire_names, wire_format
 from repro.core.takum import takum_encode
 from repro.kernels import ref as kref
@@ -36,13 +49,19 @@ from repro.kernels.lut import jnp_decode_fn, jnp_encode_fn
 from repro.kernels.takum_attention import takum_decode_attention
 from repro.kernels.takum_codec import takum_encode_2d
 from repro.kernels.takum_matmul import takum_matmul
+from repro.obs import stats as obstats
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 RESULTS = os.path.join(os.path.dirname(os.path.abspath(__file__)), "results")
 BENCH_JSON = os.path.join(REPO_ROOT, "BENCH_kernels.json")
 # smoke runs (CI) write here so they never clobber the committed full-size
-# baseline that future perf PRs are judged against
-BENCH_JSON_SMOKE = os.path.join(REPO_ROOT, "BENCH_kernels.smoke.json")
+# baseline that future perf PRs are judged against; benchmarks/results/ is
+# gitignored, so smoke artifacts never leak into the tree
+BENCH_JSON_SMOKE = os.path.join(RESULTS, "BENCH_kernels.smoke.json")
+
+#: timed passes over the full row set (odd: the median is a real sample)
+REPS_FULL = 11
+REPS_SMOKE = 5
 
 
 def bench_json_path(smoke: bool) -> str:
@@ -59,33 +78,61 @@ MM_SHAPES = [
 MM_SHAPES_SMOKE = [(256, 256, 256), (100, 60, 36)]
 
 
-def _time(f, *args, reps=5, warmup=1):
-    """Median microseconds per call; warms up (compiles) before timing.
+def _spec(section: str, fn, args: tuple, scale: float, metric: str,
+          digits: int, **meta) -> dict:
+    """One benchmark row awaiting measurement.
 
-    ``jax.block_until_ready`` handles arbitrary pytrees, so tuple-returning
-    benches need no special casing (the old version called f twice per warmup
-    and never blocked on tuple results).  Median, not mean: this container's
-    CPU timings have heavy-tailed noise.
+    ``scale / us`` is the row's throughput in ``metric`` units (Melem/s for
+    codec rows: elems/us; GFLOP/s: flops/us/1e3; tokens/s: tokens/us*1e6 —
+    callers pre-fold the unit constant into ``scale``).  ``meta`` carries
+    the identity + static fields copied verbatim onto the result row.
     """
-    for _ in range(warmup):
-        jax.block_until_ready(f(*args))
-    ts = []
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        jax.block_until_ready(f(*args))
-        ts.append((time.perf_counter() - t0) * 1e6)
-    return statistics.median(ts)
+    return {"section": section, "fn": fn, "args": args, "scale": scale,
+            "metric": metric, "digits": digits, "meta": meta}
 
 
-def _best_of_alternating(fns: dict, args: tuple, *, passes: int, reps: int) -> dict:
-    """name -> best median microseconds, with the passes *alternated* across
-    candidates: one sustained container-noise window cannot cover a single
-    candidate's whole measurement and flip an A/B comparison."""
-    acc = {k: [] for k in fns}
-    for _ in range(passes):
-        for k, f in fns.items():
-            acc[k].append(_time(f, *args, reps=reps))
-    return {k: min(v) for k, v in acc.items()}
+def _run_interleaved(specs: list[dict], reps: int) -> list[dict]:
+    """Measure all row specs with interleaved round-robin repetitions.
+
+    One warmup pass first compiles every row (outside timing), then each of
+    the ``reps`` timed passes visits every row exactly once, in spec order.
+    A sustained container-noise window therefore hits all rows roughly
+    equally — per-row rep loops concentrated it on one unlucky row, which
+    is exactly what a per-row regression gate cannot distinguish from a
+    real regression.  (This subsumes the old ``_best_of_alternating``
+    A/B-alternation: *every* comparison in the report is now alternated.)
+
+    Each result row carries ``us`` (median microseconds), the throughput
+    metric at that median, ``stats`` = {median, ci_lo, ci_hi, reps} from a
+    seeded percentile bootstrap over the per-rep throughput samples
+    (:func:`repro.obs.stats.summarize`), and the raw ``samples_us``.
+    """
+    for s in specs:
+        jax.block_until_ready(s["fn"](*s["args"]))
+    samples: list[list[float]] = [[] for _ in specs]
+    for r in range(reps):
+        with telemetry.host_span("bench.pass", cat="bench", rep=r):
+            for i, s in enumerate(specs):
+                t0 = time.perf_counter()
+                jax.block_until_ready(s["fn"](*s["args"]))
+                samples[i].append((time.perf_counter() - t0) * 1e6)
+    rows = []
+    for s, us in zip(specs, samples):
+        d = s["digits"]
+        st = obstats.summarize([s["scale"] / u for u in us])
+        rows.append({
+            **s["meta"],
+            "us": round(statistics.median(us), 1),
+            s["metric"]: round(st["median"], d),
+            "stats": {
+                "median": round(st["median"], d),
+                "ci_lo": round(st["ci_lo"], d),
+                "ci_hi": round(st["ci_hi"], d),
+                "reps": st["reps"],
+            },
+            "samples_us": [round(u, 1) for u in us],
+        })
+    return rows
 
 
 def hbm_model(rows: int, cols: int) -> dict:
@@ -141,13 +188,11 @@ def bench_decode(smoke: bool) -> list[dict]:
         modes = {
             "op_dispatch": {
                 "elems": 1 << 19 if smoke else 1 << 20,
-                "reps": 3 if smoke else 7,
                 "bits": bits_decode,
                 "lut": lut_decode,
             },
             "fused": {
                 "elems": 1 << 20 if smoke else 1 << 22,
-                "reps": 5 if smoke else 11,
                 "bits": jax.jit(bits_decode),
                 "lut": jax.jit(lut_decode),
             },
@@ -156,12 +201,11 @@ def bench_decode(smoke: bool) -> list[dict]:
             elems = cfg["elems"]
             bits = _bench_payload(rng, fmt, elems)
             for impl in ("bits", "lut"):
-                us = _time(cfg[impl], bits, reps=cfg["reps"])
-                out.append({
-                    "op": "decode", "mode": mode, "fmt": fmt, "n": n,
-                    "impl": impl, "elems": elems, "us": round(us, 1),
-                    "melem_s": round(elems / us, 1),
-                })
+                out.append(_spec(
+                    "decode", cfg[impl], (bits,), elems, "melem_s", 1,
+                    op="decode", mode=mode, fmt=fmt, n=n, impl=impl,
+                    elems=elems,
+                ))
     return out
 
 
@@ -175,8 +219,8 @@ def bench_encode(smoke: bool) -> list[dict]:
     is the heaviest codec body in the stack (~40 ops incl. the popcount
     regime scan), so the 2-gather table path wins by instruction count;
     ``fused`` records the XLA-CPU floor, where LLVM vectorises the bit
-    chain and the impls land much closer (best-of-2 medians: the margin is
-    smaller than container noise spikes).
+    chain and the impls land much closer (margins under the noise floor,
+    which is exactly what the interleaved reps + CI gate are for).
     """
     rng = np.random.default_rng(1)
     out = []
@@ -188,29 +232,22 @@ def bench_encode(smoke: bool) -> list[dict]:
         modes = {
             "op_dispatch": {
                 "elems": 1 << 18 if smoke else 1 << 20,
-                "reps": 3 if smoke else 5,
-                "passes": 1,
                 "impls": raw,
             },
             "fused": {
                 "elems": 1 << 20 if smoke else 1 << 22,
-                "reps": 5 if smoke else 10,
-                "passes": 2,
                 "impls": {k: jax.jit(f) for k, f in raw.items()},
             },
         }
         for mode, cfg in modes.items():
             elems = cfg["elems"]
             x = jnp.asarray((rng.standard_normal(elems) * 2.0).astype(np.float32))
-            best = _best_of_alternating(
-                cfg["impls"], (x,), passes=cfg["passes"], reps=cfg["reps"]
-            )
-            for impl, us in best.items():
-                out.append({
-                    "op": "encode", "mode": mode, "fmt": fmt, "n": wf.nbits,
-                    "impl": impl, "elems": elems, "us": round(us, 1),
-                    "melem_s": round(elems / us, 1),
-                })
+            for impl, f in cfg["impls"].items():
+                out.append(_spec(
+                    "encode", f, (x,), elems, "melem_s", 1,
+                    op="encode", mode=mode, fmt=fmt, n=wf.nbits, impl=impl,
+                    elems=elems,
+                ))
     return out
 
 
@@ -225,7 +262,6 @@ def bench_encode_fused(smoke: bool) -> list[dict]:
     round-trip + second kernel launch.
     """
     M, K, N = (256, 256, 256) if smoke else (512, 512, 512)
-    reps = 7 if smoke else 15
     rng = np.random.default_rng(4)
     x = jnp.asarray(rng.standard_normal((M, K)).astype(np.float32))
     out = []
@@ -233,21 +269,21 @@ def bench_encode_fused(smoke: bool) -> list[dict]:
         wb = kref.codec_encode_ref(
             jnp.asarray((rng.standard_normal((K, N)) * 0.2).astype(np.float32)), fmt
         )
+        # the two paths differ by ~20%, smaller than this container's noise
+        # spikes — the interleaved harness alternates them (with everything
+        # else) and the CI on each row quantifies the remaining uncertainty
         paths = {
             "fused": lambda a, b, fmt=fmt: takum_matmul(a, b, fmt, out_fmt=fmt),
             "separate": lambda a, b, fmt=fmt: takum_encode_2d(
                 takum_matmul(a, b, fmt), fmt
             ),
         }
-        # the two paths differ by ~20%, smaller than this container's noise
-        # spikes: alternate the passes (_best_of_alternating)
-        best = _best_of_alternating(paths, (x, wb), passes=2, reps=reps)
-        for path, us in best.items():
-            out.append({
-                "op": "encode_fused", "fmt": fmt, "n": wire_format(fmt).nbits,
-                "path": path, "M": M, "K": K, "N": N, "us": round(us, 1),
-                "melem_s": round(M * N / us, 1),
-            })
+        for path, f in paths.items():
+            out.append(_spec(
+                "encode_fused", f, (x, wb), M * N, "melem_s", 1,
+                op="encode_fused", fmt=fmt, n=wire_format(fmt).nbits,
+                path=path, M=M, K=K, N=N,
+            ))
     return out
 
 
@@ -256,7 +292,6 @@ def bench_matmul(smoke: bool) -> list[dict]:
     for takum8 across the shape sweep, plus the format matrix (default impl)
     on the lead shape — takum-vs-OFP8 on the identical kernel."""
     shapes = MM_SHAPES_SMOKE if smoke else MM_SHAPES
-    reps = 2 if smoke else 5
     rng = np.random.default_rng(2)
     out = []
     for M, K, N in shapes:
@@ -266,12 +301,11 @@ def bench_matmul(smoke: bool) -> list[dict]:
         aligned = all(d % 128 == 0 for d in (M, K, N))
         for impl in ("bits", "lut"):
             f = lambda a, b, impl=impl: takum_matmul(a, b, "t8", decode_impl=impl)
-            us = _time(f, x, wb, reps=reps)
-            out.append({
-                "op": "dequant_matmul", "fmt": "t8", "n": 8, "impl": impl,
-                "M": M, "K": K, "N": N, "aligned": aligned,
-                "us": round(us, 1), "gflop_s": round(flops / us / 1e3, 2),
-            })
+            out.append(_spec(
+                "matmul", f, (x, wb), flops / 1e3, "gflop_s", 2,
+                op="dequant_matmul", fmt="t8", n=8, impl=impl,
+                M=M, K=K, N=N, aligned=aligned,
+            ))
     # format matrix on the lead shape, per-format default impl
     M, K, N = shapes[0]
     flops = 2 * M * K * N
@@ -282,13 +316,12 @@ def bench_matmul(smoke: bool) -> list[dict]:
             continue  # already covered with both impls above
         wb = kref.codec_encode_ref(w, fmt)
         f = lambda a, b, fmt=fmt: takum_matmul(a, b, fmt)
-        us = _time(f, x, wb, reps=reps)
-        out.append({
-            "op": "dequant_matmul", "fmt": fmt, "n": wire_format(fmt).nbits,
-            "impl": "default", "M": M, "K": K, "N": N,
-            "aligned": all(d % 128 == 0 for d in (M, K, N)),
-            "us": round(us, 1), "gflop_s": round(flops / us / 1e3, 2),
-        })
+        out.append(_spec(
+            "matmul", f, (x, wb), flops / 1e3, "gflop_s", 2,
+            op="dequant_matmul", fmt=fmt, n=wire_format(fmt).nbits,
+            impl="default", M=M, K=K, N=N,
+            aligned=all(d % 128 == 0 for d in (M, K, N)),
+        ))
     return out
 
 
@@ -304,7 +337,6 @@ def bench_attention(smoke: bool) -> list[dict]:
     """
     B, H, Hkv, S, d = (1, 4, 2, 256, 64) if smoke else (2, 8, 2, 1024, 64)
     bs = 128 if smoke else 256
-    reps = 2 if smoke else 5
     rng = np.random.default_rng(3)
     q = jnp.asarray(rng.standard_normal((B, H, d)).astype(np.float32))
     out = []
@@ -322,25 +354,22 @@ def bench_attention(smoke: bool) -> list[dict]:
             f = lambda q, k, v, fmt=fmt, impl=impl: takum_decode_attention(
                 q, k, v, fmt, block_s=bs, decode_impl=impl
             )
-            us = _time(f, q, k, v, reps=reps)
-            out.append({
-                "op": "decode_attention", "fmt": fmt, "n": n, "impl": impl,
-                "B": B, "H": H, "Hkv": Hkv, "S": S, "d": d,
-                "us": round(us, 1), "tokens_s": round(B / us * 1e6, 1),
-            })
+            out.append(_spec(
+                "attention", f, (q, k, v), B * 1e6, "tokens_s", 1,
+                op="decode_attention", fmt=fmt, n=n, impl=impl,
+                B=B, H=H, Hkv=Hkv, S=S, d=d,
+            ))
     kv = jnp.asarray(rng.standard_normal((B, Hkv, S, d)).astype(np.float32))
     for fmt in (f for f in WIRE_MATRIX if f not in ("t8", "t16")):
         kb = kref.codec_encode_ref(kv, fmt)
         f = lambda q, k, v, fmt=fmt: takum_decode_attention(
             q, k, v, fmt, block_s=bs
         )
-        us = _time(f, q, kb, kb, reps=reps)
-        out.append({
-            "op": "decode_attention", "fmt": fmt,
-            "n": wire_format(fmt).nbits, "impl": "default",
-            "B": B, "H": H, "Hkv": Hkv, "S": S, "d": d,
-            "us": round(us, 1), "tokens_s": round(B / us * 1e6, 1),
-        })
+        out.append(_spec(
+            "attention", f, (q, kb, kb), B * 1e6, "tokens_s", 1,
+            op="decode_attention", fmt=fmt, n=wire_format(fmt).nbits,
+            impl="default", B=B, H=H, Hkv=Hkv, S=S, d=d,
+        ))
     return out
 
 
@@ -356,7 +385,6 @@ def bench_train_step(smoke: bool) -> list[dict]:
     from repro.quant.policy import POLICIES
 
     B, Sq = (4, 64) if smoke else (8, 128)
-    reps = 2 if smoke else 5
     out = []
     for policy in ("bf16", "ofp8", "mxfp8", "takum"):
         cfg = configs.get_smoke("llama3_8b").with_(quant=POLICIES[policy])
@@ -369,22 +397,31 @@ def bench_train_step(smoke: bool) -> list[dict]:
             rng=jax.random.PRNGKey(1),
         )
         step = jax.jit(dstep.make_train_step(cfg, mesh))
-        us = _time(step, state, batch, reps=reps)
-        out.append({
-            "op": "train_step", "arch": "llama3_8b(smoke)", "policy": policy,
-            "B": B, "S": Sq, "us": round(us, 1),
-            "tokens_s": round(B * Sq / us * 1e6, 1),
-        })
+        out.append(_spec(
+            "train_step", step, (state, batch), B * Sq * 1e6, "tokens_s", 1,
+            op="train_step", arch="llama3_8b(smoke)", policy=policy,
+            B=B, S=Sq,
+        ))
     return out
 
 
 def run(smoke: bool = False) -> dict:
-    decode = bench_decode(smoke)
-    encode = bench_encode(smoke)
-    encode_fused = bench_encode_fused(smoke)
-    matmul = bench_matmul(smoke)
-    attention = bench_attention(smoke)
-    train_step = bench_train_step(smoke)
+    specs = (
+        bench_decode(smoke) + bench_encode(smoke) + bench_encode_fused(smoke)
+        + bench_matmul(smoke) + bench_attention(smoke)
+        + bench_train_step(smoke)
+    )
+    reps = REPS_SMOKE if smoke else REPS_FULL
+    rows = _run_interleaved(specs, reps)
+    by: dict[str, list] = {}
+    for s, r in zip(specs, rows):
+        by.setdefault(s["section"], []).append(r)
+    decode = by["decode"]
+    encode = by["encode"]
+    encode_fused = by["encode_fused"]
+    matmul = by["matmul"]
+    attention = by["attention"]
+    train_step = by["train_step"]
 
     def _melem(rows, fmt, impl, mode):
         return next(
@@ -504,19 +541,20 @@ def run(smoke: bool = False) -> dict:
     }
 
     report = {
-        # v5: the wire matrix gains the block-scaled containers
-        # (mxe4m3/mxe5m2/mxt8 rows in every section), the takum_vs_mx
-        # summary, the mxfp8 e2e train-step row, and fractional-byte HBM
-        # entries.  The schema bump resets the full-vs-full throughput
-        # trajectory per benchmarks/compare.py (the v4 rows all still
-        # exist — coverage across the bump was verified by hand in PR 5 —
-        # but this container's same-code rerun noise exceeds the 20% gate,
-        # different random rows each run, so re-arming on fresh v5 numbers
-        # is the honest reset).
-        "schema": "bench_kernels/v5",
+        # v6: the offline half of repro.obs (DESIGN.md §9).  Timing moves
+        # from per-row rep loops to one interleaved round-robin harness,
+        # and every throughput row gains ``stats`` = {median, ci_lo,
+        # ci_hi, reps} (seeded bootstrap over per-rep throughput samples)
+        # plus the raw ``samples_us``.  The schema bump resets the
+        # full-vs-full trajectory per benchmarks/compare.py — the v5 point
+        # estimates carry no uncertainty, so gating v6 CIs against them
+        # would be comparing a distribution to a coin flip; re-arming on
+        # fresh v6 numbers (with CIs) is the honest reset.
+        "schema": "bench_kernels/v6",
         "backend": jax.default_backend(),
         "interpret_mode": jax.default_backend() == "cpu",
         "smoke": smoke,
+        "reps": reps,
         "decode": decode,
         "encode": encode,
         "encode_fused": encode_fused,

@@ -7,9 +7,9 @@ benches.  Prints ``name,us_per_call,derived`` CSV lines.
 150-matrix figure2 corpus, the small-payload collectives subprocess, the
 analytic-only roofline) and validates the JSON artifact; ``--json`` makes
 the kernel bench emit ``BENCH_kernels.json`` at the repo root (the
-persistent perf-trajectory record; smoke runs divert to
-``BENCH_kernels.smoke.json`` so they never clobber the committed full-size
-baseline) and then *folds* the other benches' summaries
+persistent perf-trajectory record; smoke runs divert to the gitignored
+``benchmarks/results/BENCH_kernels.smoke.json`` so they never clobber the
+committed full-size baseline) and then *folds* the other benches' summaries
 (``benchmarks/results/{figure2,isa_tables,collectives,roofline}.json``)
 into it, so one artifact carries the whole trajectory.  Benches whose
 subsystem is still a stub (NotImplementedError) are reported as SKIP, not
@@ -106,6 +106,16 @@ def _validate_bench_json(smoke: bool, fold_keys: set) -> None:
                 } | fold_keys
     missing = required - report.keys()
     assert not missing, f"BENCH_kernels.json missing keys: {sorted(missing)}"
+    assert report["schema"] == "bench_kernels/v6", report["schema"]
+    # v6: every throughput row carries interleaved-rep bootstrap stats
+    for section in ("decode", "encode", "encode_fused", "matmul",
+                    "attention", "train_step"):
+        for r in report[section]:
+            st = r.get("stats")
+            assert st is not None, f"{section} row missing stats: {r}"
+            assert {"median", "ci_lo", "ci_hi", "reps"} <= st.keys(), st
+            assert st["reps"] >= 3, f"{section} row has too few reps: {st}"
+            assert st["ci_lo"] <= st["median"] <= st["ci_hi"], st
     impls = {(r["fmt"], r["impl"]) for r in report["decode"]}
     assert {("t8", "bits"), ("t8", "lut"), ("t16", "bits"), ("t16", "lut"),
             ("e4m3", "lut"), ("e5m2", "lut"), ("bf16", "bits"),

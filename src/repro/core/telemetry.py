@@ -1,11 +1,30 @@
-"""Host-side numeric-health counters for the wire stack.
+"""Host-side metrics registry for the wire stack: counters, gauges,
+histograms, and trace-time-gated timer spans.
 
-The fault-containment layer (DESIGN.md §8) measures rather than hides:
-special-value counts on collective hops, KV-cache appends and quantize
-calls, degradation-ladder escalations, contained (zeroed) hop elements,
-skipped optimizer updates.  All of those happen *inside* jitted/shard_map
-regions, so the counters are surfaced through ``jax.debug.callback`` into a
-process-global :class:`collections.Counter`.
+PR 6 proved the zero-cost-when-idle counter pattern (fault containment,
+DESIGN.md §8); this module generalises it into the online half of the
+``repro.obs`` observability subsystem (DESIGN.md §9).  Everything of
+interest happens *inside* jitted/shard_map regions, so all device-side
+instrumentation is surfaced through ``jax.debug.callback`` into
+process-global stores.
+
+Metric kinds (all keyed by dotted tags — ``wire.hop_bytes``,
+``kernel.calls.matmul.t8``, ``step.grad_norm``, ...):
+
+* **counter** — float sum (:func:`emit` / :func:`record`).
+* **gauge**   — last value wins (:func:`emit_gauge` / :func:`record_gauge`).
+* **histogram** — running count/sum/min/max plus a bounded, deterministic
+  stride-decimated sample for quantiles (:func:`emit_hist` /
+  :func:`record_hist`).
+* **span** — a named timed interval.  :func:`host_span` measures a host-side
+  region with real wall clock (train-loop steps, bench reps, eager
+  dispatch); :func:`trace_span` instruments *traced* code with a paired
+  begin/end callback whose host arrival times bracket the async device
+  execution ("callback clock": approximate, honest — the callbacks are
+  unordered, so durations are indicative rather than exact, and an end may
+  occasionally pair with a neighbouring execution's begin under overlap).
+  Spans carry a category (``kernel`` / ``collective`` / ``step`` / ...)
+  used by the Chrome-trace export (:mod:`repro.obs.trace_export`).
 
 Usage::
 
@@ -13,22 +32,31 @@ Usage::
         fn = jax.jit(step)          # trace INSIDE the capture scope
         fn(...)
     counters["wire.escalations"]    # accumulated across all calls
+    telemetry.spans()               # list of recorded span dicts
+    telemetry.snapshot()            # everything, export-ready
 
 Two gates keep the cost at zero when nobody is listening:
 
-* ``emit`` is a **trace-time** no-op unless a capture scope is active when
-  the emitting code is *traced* — a jitted function traced outside
-  ``capture()`` carries no callbacks at all (and, conversely, one traced
-  inside keeps emitting for its cached lifetime; chaos tests run in fresh
-  subprocesses so neither direction leaks).
+* every ``emit*``/``trace_span`` is a **trace-time** no-op unless a capture
+  scope is active when the emitting code is *traced* — a jitted function
+  traced outside ``capture()`` carries no callbacks (and no extra ops at
+  all: the zero-op property is asserted on the jaxpr in tests/test_obs.py).
+  Conversely, one traced inside keeps emitting for its cached lifetime;
+  tests that need isolation run in fresh subprocesses.
 * at runtime, values arriving while no capture is active are dropped.
 
-Counters are plain float sums keyed by dotted tags (``"wire.contained"``,
-``"wire.rung.t16"``, ``"kv.specials.e4m3"``, ...).  Under shard_map every
-device emits, so per-device quantities arrive ``N``-fold; emit either
-pre-reduced values or document the multiplicity at the tag (the guarded
-collectives emit psum'd scalars, which makes the sum ``N * global`` — the
-tests divide or compare against zero, both multiplicity-proof).
+Under shard_map every device emits, so per-device quantities arrive
+``N``-fold: counters sum N devices' values, histograms take N samples per
+logical event, and a ``trace_span`` yields N span records per traced
+execution.  Emit pre-reduced values or document the multiplicity at the tag
+(DESIGN.md §9 lists the rule per tag namespace).
+
+``jax.profiler.TraceAnnotation`` bridging: :func:`annotate_xla` (or
+``capture(annotate_xla=True)``) makes :func:`host_span` also enter a
+profiler ``TraceAnnotation``, so host spans line up with XLA device traces
+when ``jax.profiler`` is active; :func:`trace_span` always wraps the traced
+region in ``jax.named_scope`` (pure metadata — the HLO ops carry the span
+name, which is what the XLA profile groups by).
 """
 
 from __future__ import annotations
@@ -36,13 +64,23 @@ from __future__ import annotations
 import collections
 import contextlib
 import functools
+import itertools
 import threading
+import time
 
 import jax
+import jax.numpy as jnp
 
 _LOCK = threading.Lock()
 _COUNTERS: collections.Counter = collections.Counter()
+_GAUGES: dict = {}
+_HISTS: dict = {}
+_SPANS: list = []
+_OPEN: dict = {}  # span id -> deque of (t0, thread) awaiting their end
+_DROPPED_SPANS = 0
 _DEPTH = 0  # capture scopes may nest; any active scope enables recording
+_ANNOTATE_XLA = False
+_SPAN_IDS = itertools.count()
 
 
 def enabled() -> bool:
@@ -50,48 +88,297 @@ def enabled() -> bool:
     return _DEPTH > 0
 
 
+def annotate_xla(flag: bool) -> None:
+    """Bridge host spans into ``jax.profiler.TraceAnnotation`` so they line
+    up with XLA profiles (optional: annotations are cheap but not free)."""
+    global _ANNOTATE_XLA
+    _ANNOTATE_XLA = bool(flag)
+
+
+# ---------------------------------------------------------------------------
+# host-side recorders (the callback targets; also callable directly)
+# ---------------------------------------------------------------------------
+
+
 def record(tag: str, value) -> None:
-    """Host-side accumulate (the callback target; also callable directly)."""
+    """Counter accumulate."""
     if _DEPTH > 0:
         with _LOCK:
             _COUNTERS[tag] += float(value)
 
 
-def emit(tag: str, value) -> None:
-    """Trace-safe counter emission: inside jit/shard_map this schedules an
-    unordered debug callback; outside it records immediately.  A no-op
-    (zero ops in the trace) unless a capture scope is active at trace time.
+def record_gauge(tag: str, value) -> None:
+    """Gauge: last value wins."""
+    if _DEPTH > 0:
+        with _LOCK:
+            _GAUGES[tag] = float(value)
+
+
+class _Hist:
+    """count/sum/min/max + a bounded deterministic sample.
+
+    When the sample buffer fills it is decimated to every other element and
+    the keep-stride doubles — no RNG (reproducible runs), bounded memory,
+    and the surviving sample stays spread over the whole recording window
+    instead of privileging the first CAP values.
     """
+
+    CAP = 4096
+    __slots__ = ("count", "total", "vmin", "vmax", "sample", "_stride", "_skip")
+
+    def __init__(self):
+        self.count = 0
+        self.total = 0.0
+        self.vmin = float("inf")
+        self.vmax = float("-inf")
+        self.sample: list = []
+        self._stride = 1
+        self._skip = 0
+
+    def add(self, v: float) -> None:
+        self.count += 1
+        self.total += v
+        self.vmin = min(self.vmin, v)
+        self.vmax = max(self.vmax, v)
+        self._skip += 1
+        if self._skip >= self._stride:
+            self._skip = 0
+            self.sample.append(v)
+            if len(self.sample) >= self.CAP:
+                self.sample = self.sample[::2]
+                self._stride *= 2
+
+    def summary(self) -> dict:
+        s = sorted(self.sample)
+        q = lambda p: s[min(len(s) - 1, int(p * len(s)))] if s else float("nan")
+        return {
+            "count": self.count,
+            "sum": self.total,
+            "min": self.vmin if self.count else float("nan"),
+            "max": self.vmax if self.count else float("nan"),
+            "mean": self.total / self.count if self.count else float("nan"),
+            "p50": q(0.50), "p90": q(0.90), "p99": q(0.99),
+        }
+
+
+def record_hist(tag: str, value) -> None:
+    """Histogram sample accumulate."""
+    if _DEPTH > 0:
+        with _LOCK:
+            h = _HISTS.get(tag)
+            if h is None:
+                h = _HISTS[tag] = _Hist()
+            h.add(float(value))
+
+
+def _record_span(name: str, cat: str, t0: float, t1: float, args=None) -> None:
+    if _DEPTH > 0:
+        with _LOCK:
+            _SPANS.append({
+                "name": name, "cat": cat, "t0": t0, "t1": t1,
+                "tid": threading.get_ident(), **({"args": args} if args else {}),
+            })
+
+
+def _span_begin(sid: int, name: str, cat: str, *_dummy) -> None:
+    if _DEPTH > 0:
+        with _LOCK:
+            _OPEN.setdefault(sid, collections.deque()).append(
+                (name, cat, time.perf_counter())
+            )
+
+
+def _span_end(sid: int, *_dep) -> None:
+    global _DROPPED_SPANS
+    if _DEPTH > 0:
+        t1 = time.perf_counter()
+        with _LOCK:
+            q = _OPEN.get(sid)
+            if not q:
+                _DROPPED_SPANS += 1  # end arrived without a live begin
+                return
+            name, cat, t0 = q.popleft()
+            _SPANS.append({
+                "name": name, "cat": cat, "t0": t0, "t1": t1,
+                "tid": threading.get_ident(),
+            })
+
+
+# ---------------------------------------------------------------------------
+# trace-safe emitters (double-gated: trace-time no-op without a capture)
+# ---------------------------------------------------------------------------
+
+
+def emit(tag: str, value) -> None:
+    """Counter emission: inside jit/shard_map this schedules an unordered
+    debug callback; outside it records immediately.  A no-op (zero ops in
+    the trace) unless a capture scope is active at trace time."""
     if _DEPTH > 0:
         # the tag is static (a python string, not a jax type): close over it
         jax.debug.callback(functools.partial(record, tag), value, ordered=False)
 
 
+def emit_gauge(tag: str, value) -> None:
+    if _DEPTH > 0:
+        jax.debug.callback(
+            functools.partial(record_gauge, tag), value, ordered=False
+        )
+
+
+def emit_hist(tag: str, value) -> None:
+    if _DEPTH > 0:
+        jax.debug.callback(
+            functools.partial(record_hist, tag), value, ordered=False
+        )
+
+
+class _SpanHandle:
+    """Yielded by :func:`trace_span`; set ``.dep`` to a (cheap, scalar)
+    value computed from the span's result to give the end callback a data
+    dependency — the runtime then cannot fire it before the result exists."""
+
+    __slots__ = ("dep",)
+
+    def __init__(self):
+        self.dep = None
+
+
+def probe(x):
+    """Cheap scalar data-dependency on ``x`` for span end callbacks: one
+    element, so the host transfer is O(1) regardless of ``x``'s size."""
+    x = jnp.asarray(x)
+    if x.size == 0:
+        return jnp.float32(0)
+    return jax.lax.slice(x.reshape(-1), (0,), (1,))
+
+
+@contextlib.contextmanager
+def trace_span(name: str, cat: str = "trace"):
+    """Timer span around *traced* code (usable inside jit/shard_map and in
+    eager code alike).  Zero added ops unless a capture scope is active at
+    trace time; under a capture, a begin/end callback pair brackets the
+    region ("callback clock" — see module docstring) and the traced ops are
+    wrapped in ``jax.named_scope(name)`` so XLA profiles carry the name.
+
+    Yields a :class:`_SpanHandle`: optionally set ``handle.dep =
+    probe(result)`` so the end callback waits for the result.
+    """
+    if _DEPTH == 0:
+        yield _SpanHandle()
+        return
+    sid = next(_SPAN_IDS)
+    # the dummy operand keeps the callback legal in traces that reject
+    # zero-operand callbacks (eager shard_map bodies in this jax version)
+    jax.debug.callback(
+        functools.partial(_span_begin, sid, name, cat), jnp.uint8(0),
+        ordered=False,
+    )
+    h = _SpanHandle()
+    with jax.named_scope(name):
+        yield h
+    end = functools.partial(_span_end, sid)
+    jax.debug.callback(
+        end, jnp.uint8(0) if h.dep is None else h.dep, ordered=False
+    )
+
+
+@contextlib.contextmanager
+def host_span(name: str, cat: str = "host", **args):
+    """Wall-clock span over a host-side region (no tracing involved): the
+    train loop's per-step timing, bench repetitions, export passes.  Gated
+    at runtime only — host code has no trace time — so it is safe (and
+    free) to leave in place permanently."""
+    if _DEPTH == 0:
+        yield
+        return
+    ann = (
+        jax.profiler.TraceAnnotation(name)
+        if _ANNOTATE_XLA
+        else contextlib.nullcontext()
+    )
+    t0 = time.perf_counter()
+    try:
+        with ann:
+            yield
+    finally:
+        _record_span(name, cat, t0, time.perf_counter(), args or None)
+
+
+# ---------------------------------------------------------------------------
+# snapshots
+# ---------------------------------------------------------------------------
+
+
 def counters() -> dict:
-    """Snapshot of the accumulated counters."""
     with _LOCK:
         return dict(_COUNTERS)
 
 
+def gauges() -> dict:
+    with _LOCK:
+        return dict(_GAUGES)
+
+
+def hists() -> dict:
+    """tag -> summary dict (count/sum/min/max/mean/p50/p90/p99)."""
+    with _LOCK:
+        return {tag: h.summary() for tag, h in _HISTS.items()}
+
+
+def spans() -> list:
+    with _LOCK:
+        return list(_SPANS)
+
+
+def dropped_spans() -> int:
+    return _DROPPED_SPANS
+
+
+def snapshot() -> dict:
+    """Everything the exporters consume, in one consistent view."""
+    with _LOCK:
+        return {
+            "counters": dict(_COUNTERS),
+            "gauges": dict(_GAUGES),
+            "hists": {tag: h.summary() for tag, h in _HISTS.items()},
+            "spans": list(_SPANS),
+            "dropped_spans": _DROPPED_SPANS,
+        }
+
+
 def reset() -> None:
+    global _DROPPED_SPANS
     with _LOCK:
         _COUNTERS.clear()
+        _GAUGES.clear()
+        _HISTS.clear()
+        _SPANS.clear()
+        _OPEN.clear()
+        _DROPPED_SPANS = 0
 
 
 @contextlib.contextmanager
-def capture(fresh: bool = True):
-    """Enable counter recording; yields the live Counter.  ``fresh`` resets
-    accumulated state on entry (nested scopes share one Counter).
+def capture(fresh: bool = True, annotate_xla: bool | None = None):
+    """Enable metric recording; yields the live counter store (the
+    historical API — gauges/hists/spans are read via :func:`gauges` /
+    :func:`hists` / :func:`spans` / :func:`snapshot`).  ``fresh`` resets
+    accumulated state on entry of the *outermost* scope only: nested scopes
+    share one store and never clear it (asserted in tests/test_obs.py).
+    ``annotate_xla`` optionally flips the TraceAnnotation bridge for the
+    scope's duration.
 
     Exit blocks on :func:`jax.effects_barrier`: the debug callbacks are
     unordered and asynchronous, so without a flush an emission from a
     just-finished computation can land after the scope closes — and be
     dropped by the runtime gate.  Flushing before the depth decrement makes
-    the exited Counter complete for everything launched inside the scope.
+    the exited store complete for everything launched inside the scope.
     """
-    global _DEPTH
+    global _DEPTH, _ANNOTATE_XLA
     if fresh and _DEPTH == 0:
         reset()
+    prev_ann = _ANNOTATE_XLA
+    if annotate_xla is not None:
+        _ANNOTATE_XLA = bool(annotate_xla)
     _DEPTH += 1
     try:
         yield _COUNTERS
@@ -100,3 +387,4 @@ def capture(fresh: bool = True):
             jax.effects_barrier()
         finally:
             _DEPTH -= 1
+            _ANNOTATE_XLA = prev_ann

@@ -115,7 +115,8 @@ def axis_size(axis_name) -> int:
 
 
 def _ring_reduce(wire, own_f32, axis_name, decode, N: int,
-                 canonical_order: bool = True, contain_abs=None):
+                 canonical_order: bool = True, contain_abs=None,
+                 fmt_name: str = "wire"):
     """P-1 ``ppermute`` hops of narrow wire payloads; f32 sum of the decodes.
 
     ``wire`` is this device's encoded contribution (takum bits or bf16),
@@ -137,6 +138,12 @@ def _ring_reduce(wire, own_f32, axis_name, decode, N: int,
     ``contained`` is this device's f32 count of zeroed elements (0.0 when
     containment is off); each hop message lands on exactly one device, so
     the per-device counts sum to the global count.
+
+    Observability (``wire.*``, DESIGN.md §9; zero ops unless a telemetry
+    capture is active at trace time): per ring call, ``wire.hops`` (N-1)
+    and ``wire.hop_bytes`` (the honest per-device wire traffic, payload
+    bytes x hops), plus one ``wire.hop.<fmt>`` span (cat ``collective``)
+    per hop — per device, so totals carry the ring multiplicity N.
     """
     def arm(term):
         if contain_abs is None:
@@ -148,9 +155,15 @@ def _ring_reduce(wire, own_f32, axis_name, decode, N: int,
     own, contained = arm(own_f32)
     terms = [own]  # hop 0 = own payload = source p
     msg = wire
+    if telemetry.enabled():
+        msg_bytes = float(wire.size * wire.dtype.itemsize)
+        telemetry.emit("wire.hops", float(N - 1))
+        telemetry.emit("wire.hop_bytes", (N - 1) * msg_bytes)
     for _ in range(N - 1):
-        msg = faults.corrupt_hop(jax.lax.ppermute(msg, axis_name, perm), axis_name)
-        term, c = arm(decode(msg))  # hop i carries source (p - i) % N
+        with telemetry.trace_span(f"wire.hop.{fmt_name}", cat="collective") as sp:
+            msg = faults.corrupt_hop(jax.lax.ppermute(msg, axis_name, perm), axis_name)
+            term, c = arm(decode(msg))  # hop i carries source (p - i) % N
+            sp.dep = telemetry.probe(term)
         contained = contained + c
         terms.append(term)
     stacked = jnp.stack(terms)
@@ -196,11 +209,17 @@ def compressed_psum(x, axis_name, fmt="t8", *, exact_local: bool = True,
         # slice back out (zero padding never perturbs a block's scale)
         xf = blockscale.pad_block(jnp.atleast_1d(xf))
     encode, decode = wire_codec(wf.name, sr_key=sr_key)
-    wire = encode(xf)
-    own = xf if exact_local else decode(wire)
-    out, _ = _ring_reduce(wire, own, axis_name, decode, N, canonical_order)
-    if wf.is_block_scaled:
-        out = out[..., :n].reshape(jnp.shape(x))
+    with telemetry.trace_span(f"wire.ring.{wf.name}", cat="collective") as sp:
+        wire = encode(xf)
+        own = xf if exact_local else decode(wire)
+        out, _ = _ring_reduce(
+            wire, own, axis_name, decode, N, canonical_order, fmt_name=wf.name
+        )
+        if wf.is_block_scaled:
+            out = out[..., :n].reshape(jnp.shape(x))
+        sp.dep = telemetry.probe(out)
+    telemetry.emit("wire.calls", jnp.float32(1))
+    telemetry.emit(f"wire.rung.{wf.name}", jnp.float32(1))
     return out
 
 
@@ -273,7 +292,7 @@ def degraded_psum(x, axis_name, fmt, guard, *, exact_local: bool = True,
                 own = xp if exact_local else q
                 out, contained = _ring_reduce(
                     wire, own, axis_name, decode, N, canonical_order,
-                    contain_abs=contain)
+                    contain_abs=contain, fmt_name=wf.name)
                 if wf.is_block_scaled:
                     out = out[..., :n].reshape(shape)
                 telemetry.emit(f"wire.rung.{wf.name}", jnp.float32(1))

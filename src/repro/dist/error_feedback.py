@@ -87,7 +87,10 @@ def ef_compressed_psum(g, err, axis_name, fmt="t8", guard=None):
             if N == 1:
                 reduced = q
             else:
-                reduced, _ = _ring_reduce(bits, q, axis_name, decode, N)
+                reduced, _ = _ring_reduce(
+                    bits, q, axis_name, decode, N, fmt_name=wf.name
+                )
+            telemetry.emit("ef.calls", jnp.float32(1))
             if wf.is_block_scaled:
                 reduced = reduced[..., :n].reshape(shape)
                 new_err = new_err[..., :n].reshape(shape)
@@ -115,7 +118,8 @@ def ef_compressed_psum(g, err, axis_name, fmt="t8", guard=None):
                     reduced, contained_ = q, jnp.float32(0)
                 else:
                     reduced, contained_ = _ring_reduce(
-                        bits, q, axis_name, dec, N, contain_abs=contain)
+                        bits, q, axis_name, dec, N, contain_abs=contain,
+                        fmt_name=rwf.name)
                 if rwf.is_block_scaled:
                     out = reduced[..., :n].reshape(shape)
                     ne = new_err[..., :n].reshape(shape)

@@ -124,13 +124,19 @@ def pipeline_apply(stage_fn, stage_params, x, *, mesh, axis: str = "pipe",
 
     def plain_hop(out, perm):
         # exact f32 hop (still subject to injected hop faults + containment)
+        if telemetry.enabled():
+            telemetry.emit(
+                "pipe.hop_bytes", float(out.size * out.dtype.itemsize))
         return contain(faults.corrupt_hop(jax.lax.ppermute(out, axis, perm), axis))
 
     def coded_hop(out, perm, dtype):
         # narrow wire: encode once, move packed bits, decode on
         # arrival (the pipe_act compressed-hop surface)
-        wire = faults.corrupt_hop(
-            jax.lax.ppermute(hop_encode(out), axis, perm), axis)
+        wire = hop_encode(out)
+        if telemetry.enabled():
+            telemetry.emit(
+                "pipe.hop_bytes", float(wire.size * wire.dtype.itemsize))
+        wire = faults.corrupt_hop(jax.lax.ppermute(wire, axis, perm), axis)
         return contain(hop_decode(wire).astype(dtype))
 
     def guarded_hop(out, perm, dtype):
@@ -161,6 +167,11 @@ def pipeline_apply(stage_fn, stage_params, x, *, mesh, axis: str = "pipe",
 
         telemetry.emit("pipe.hops", jnp.float32(1))
         telemetry.emit("pipe.escalated", trip.astype(jnp.float32))
+        # charged at the base rung: the escalated branch's width is a
+        # runtime decision, so the static byte count reflects the healthy
+        # path (escalations are separately visible via pipe.escalated)
+        telemetry.emit(
+            "pipe.hop_bytes", float(wire.size * wire.dtype.itemsize))
         return contain(jax.lax.cond(trip, widened, base)).astype(dtype)
 
     def body(w_local, x_all):
@@ -182,12 +193,16 @@ def pipeline_apply(stage_fn, stage_params, x, *, mesh, axis: str = "pipe",
                 # the other stages vanish in the psum broadcast below
                 out_buf = out_buf.at[m].set(jnp.where(p == nstages - 1, out, 0.0))
             if nstages > 1:
-                if hop_encode is None:
-                    recv = plain_hop(out, perm)
-                elif guard is None:
-                    recv = coded_hop(out, perm, x_all.dtype)
-                else:
-                    recv = guarded_hop(out, perm, x_all.dtype)
+                telemetry.emit("pipe.ticks", jnp.float32(1))
+                with telemetry.trace_span(f"pipe.hop.{name}",
+                                          cat="collective") as sp:
+                    if hop_encode is None:
+                        recv = plain_hop(out, perm)
+                    elif guard is None:
+                        recv = coded_hop(out, perm, x_all.dtype)
+                    else:
+                        recv = guarded_hop(out, perm, x_all.dtype)
+                    sp.dep = telemetry.probe(recv)
         return jax.lax.psum(out_buf, axis)
 
     fn = shard_map(

@@ -171,30 +171,43 @@ def make_train_step(cfg, mesh, *, lr=3e-4, aux_weight: float = 0.01,
             return loss, metrics, grads
 
     def step(state: TrainState, batch):
-        rng, sr_key, wire_key = jax.random.split(state.rng, 3)
-        loss, metrics, grads = fwd_bwd(state.params, batch, wire_key)
-        use_sr = cfg.quant.stochastic_rounding and is_takum(cfg.quant.opt_state)
-        new_params, new_opt = adamw_update(
-            grads, state.opt, state.params, lr=lr, fmt=cfg.quant.opt_state,
-            key=sr_key if use_sr else None,
-        )
-        out = {"loss": loss, "ce": metrics["ce"], "aux": metrics["aux"]}
-        guard = cfg.quant.guard
-        if guard is not None and guard.skip_nonfinite_update:
-            # GradScaler-style microbatch skip: a step whose raw gradients
-            # were not everywhere finite leaves params AND opt state
-            # untouched (training on contained-to-zero garbage would still
-            # corrupt the Adam moments).  grad_ok is a pmean'd fraction, so
-            # every device takes the same branch.
-            ok = metrics["grad_ok"] >= jnp.float32(0.999)
-            keep = lambda n, o: jnp.where(ok, n, o)
-            params = jax.tree.map(keep, new_params, state.params)
-            opt = jax.tree.map(keep, new_opt, state.opt)
-            telemetry.emit("step.calls", jnp.float32(1))
-            telemetry.emit("step.skipped", jnp.float32(1) - ok.astype(jnp.float32))
-            out["grad_ok"] = metrics["grad_ok"]
-        else:
-            params, opt = new_params, new_opt
+        with telemetry.trace_span("step.train", cat="step") as sp:
+            rng, sr_key, wire_key = jax.random.split(state.rng, 3)
+            loss, metrics, grads = fwd_bwd(state.params, batch, wire_key)
+            if telemetry.enabled():
+                # one record per *execution* of this trace (the step runs
+                # outside shard_map, so multiplicity is 1, not n_devices)
+                telemetry.emit("step.calls", jnp.float32(1))
+                tok = batch.get("tokens")
+                if tok is not None:
+                    telemetry.emit("step.tokens", float(tok.shape[0] * tok.shape[1]))
+                gn = jnp.sqrt(sum(
+                    jnp.sum(jnp.square(g.astype(jnp.float32)))
+                    for g in jax.tree.leaves(grads)
+                ))
+                telemetry.emit_hist("step.grad_norm", gn)
+            use_sr = cfg.quant.stochastic_rounding and is_takum(cfg.quant.opt_state)
+            new_params, new_opt = adamw_update(
+                grads, state.opt, state.params, lr=lr, fmt=cfg.quant.opt_state,
+                key=sr_key if use_sr else None,
+            )
+            out = {"loss": loss, "ce": metrics["ce"], "aux": metrics["aux"]}
+            guard = cfg.quant.guard
+            if guard is not None and guard.skip_nonfinite_update:
+                # GradScaler-style microbatch skip: a step whose raw gradients
+                # were not everywhere finite leaves params AND opt state
+                # untouched (training on contained-to-zero garbage would still
+                # corrupt the Adam moments).  grad_ok is a pmean'd fraction, so
+                # every device takes the same branch.
+                ok = metrics["grad_ok"] >= jnp.float32(0.999)
+                keep = lambda n, o: jnp.where(ok, n, o)
+                params = jax.tree.map(keep, new_params, state.params)
+                opt = jax.tree.map(keep, new_opt, state.opt)
+                telemetry.emit("step.skipped", jnp.float32(1) - ok.astype(jnp.float32))
+                out["grad_ok"] = metrics["grad_ok"]
+            else:
+                params, opt = new_params, new_opt
+            sp.dep = telemetry.probe(loss)
         return TrainState(params=params, opt=opt, rng=rng), out
 
     return step

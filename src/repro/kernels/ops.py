@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.core import telemetry
 from repro.core.formats import kernel_wire_names, wire_format
 from . import ref
 from .lut import resolve_impl
@@ -34,6 +35,36 @@ from .takum_codec import takum_decode_2d, takum_encode_2d
 from .takum_matmul import takum_dual_matmul, takum_matmul
 
 _USE_KERNELS = True
+
+
+def _wire_bytes(*arrs) -> float:
+    """Static wire-byte count of the packed-payload operands/results."""
+    return float(sum(a.size * a.dtype.itemsize for a in arrs))
+
+
+def _observed(op: str, fmt_name: str, call, *wire_arrs, out_is_wire=False):
+    """Dispatch-layer observability (DESIGN.md §9, ``kernel.*`` namespace).
+
+    Zero added ops unless a :func:`repro.core.telemetry.capture` scope is
+    active at trace time (asserted on the jaxpr in tests/test_obs.py).
+    Under a capture, every dispatch emits one ``kernel.calls.<op>.<fmt>``
+    counter, charges ``kernel.wire_bytes.<op>`` with the packed bytes it
+    moved (the wire-side input operands, plus the packed output when
+    ``out_is_wire`` — i.e. ``encode`` and the fused ``out_fmt=``
+    producers), and brackets the op in a ``kernel.<op>.<fmt>`` span
+    (category ``kernel``) whose end callback data-depends on the result.
+    Under shard_map the counts arrive once per device (multiplicity N).
+    """
+    if not telemetry.enabled():
+        return call()
+    telemetry.emit(f"kernel.calls.{op}.{fmt_name}", 1.0)
+    with telemetry.trace_span(f"kernel.{op}.{fmt_name}", cat="kernel") as sp:
+        out = call()
+        sp.dep = telemetry.probe(out)
+    nbytes = _wire_bytes(*wire_arrs) + (_wire_bytes(out) if out_is_wire else 0.0)
+    if nbytes:
+        telemetry.emit(f"kernel.wire_bytes.{op}", nbytes)
+    return out
 
 
 def use_kernels(flag: bool) -> None:
@@ -160,21 +191,29 @@ def encode(x, fmt, encode_impl=None):
     """
     name = _name(fmt)
     _check_mx_encode_input(x, name)
-    if _kernelable(x, name):
-        x2, shape = _as_2d(x)
-        out = takum_encode_2d(x2, name, encode_impl=encode_impl)
-        return _reshape_back(out, shape)
-    return ref.codec_encode_ref(x, name)
+
+    def call():
+        if _kernelable(x, name):
+            x2, shape = _as_2d(x)
+            out = takum_encode_2d(x2, name, encode_impl=encode_impl)
+            return _reshape_back(out, shape)
+        return ref.codec_encode_ref(x, name)
+
+    return _observed("encode", name, call, out_is_wire=True)
 
 
 def decode(bits, fmt, decode_impl=None):
     name = _name(fmt)
     _check_mx_payload(bits, name, "decode payload")
-    if _kernelable(bits, name):
-        b2, shape = _as_2d(bits)
-        out = takum_decode_2d(b2, name, decode_impl=decode_impl)
-        return _reshape_back(out, shape)
-    return ref.codec_decode_ref(bits, name)
+
+    def call():
+        if _kernelable(bits, name):
+            b2, shape = _as_2d(bits)
+            out = takum_decode_2d(b2, name, decode_impl=decode_impl)
+            return _reshape_back(out, shape)
+        return ref.codec_decode_ref(bits, name)
+
+    return _observed("decode", name, call, bits)
 
 
 def matmul(x, w_bits, fmt, out_dtype=jnp.float32, decode_impl=None,
@@ -187,16 +226,22 @@ def matmul(x, w_bits, fmt, out_dtype=jnp.float32, decode_impl=None,
     name = _name(fmt)
     _check_mx_payload(w_bits, name, "matmul w_bits")
     out_name = _name(out_fmt) if out_fmt is not None else None
-    if _USE_KERNELS and _kernel_fmt_ok(name) and (
-        out_name is None or _kernel_fmt_ok(out_name)
-    ):
-        return takum_matmul(
-            x, w_bits, name, out_dtype=out_dtype, decode_impl=decode_impl,
-            out_fmt=out_name, encode_impl=encode_impl, **blocks
-        )
-    if out_fmt is not None:
-        return ref.fused_matmul_ref(x, w_bits, name, out_name)
-    return ref.takum_matmul_ref(x, w_bits, name, out_dtype=out_dtype)
+
+    def call():
+        if _USE_KERNELS and _kernel_fmt_ok(name) and (
+            out_name is None or _kernel_fmt_ok(out_name)
+        ):
+            return takum_matmul(
+                x, w_bits, name, out_dtype=out_dtype, decode_impl=decode_impl,
+                out_fmt=out_name, encode_impl=encode_impl, **blocks
+            )
+        if out_fmt is not None:
+            return ref.fused_matmul_ref(x, w_bits, name, out_name)
+        return ref.takum_matmul_ref(x, w_bits, name, out_dtype=out_dtype)
+
+    return _observed(
+        "matmul", name, call, w_bits, out_is_wire=out_name is not None
+    )
 
 
 def dual_matmul(x_bits, w_bits, fmt, out_dtype=jnp.float32, decode_impl=None,
@@ -205,16 +250,26 @@ def dual_matmul(x_bits, w_bits, fmt, out_dtype=jnp.float32, decode_impl=None,
     _check_mx_payload(x_bits, name, "dual_matmul x_bits")
     _check_mx_payload(w_bits, name, "dual_matmul w_bits")
     out_name = _name(out_fmt) if out_fmt is not None else None
-    if _USE_KERNELS and _kernel_fmt_ok(name) and (
-        out_name is None or _kernel_fmt_ok(out_name)
-    ):
-        return takum_dual_matmul(
-            x_bits, w_bits, name, out_dtype=out_dtype, decode_impl=decode_impl,
-            out_fmt=out_name, encode_impl=encode_impl, **blocks
+
+    def call():
+        if _USE_KERNELS and _kernel_fmt_ok(name) and (
+            out_name is None or _kernel_fmt_ok(out_name)
+        ):
+            return takum_dual_matmul(
+                x_bits, w_bits, name, out_dtype=out_dtype,
+                decode_impl=decode_impl, out_fmt=out_name,
+                encode_impl=encode_impl, **blocks
+            )
+        if out_fmt is not None:
+            return ref.fused_dual_matmul_ref(x_bits, w_bits, name, out_name)
+        return ref.takum_dual_matmul_ref(
+            x_bits, w_bits, name, out_dtype=out_dtype
         )
-    if out_fmt is not None:
-        return ref.fused_dual_matmul_ref(x_bits, w_bits, name, out_name)
-    return ref.takum_dual_matmul_ref(x_bits, w_bits, name, out_dtype=out_dtype)
+
+    return _observed(
+        "dual_matmul", name, call, x_bits, w_bits,
+        out_is_wire=out_name is not None,
+    )
 
 
 def decode_attention(q, k_bits, v_bits, fmt, decode_impl=None, out_fmt=None,
@@ -223,13 +278,22 @@ def decode_attention(q, k_bits, v_bits, fmt, decode_impl=None, out_fmt=None,
     _check_mx_payload(k_bits, name, "decode_attention k_bits")
     _check_mx_payload(v_bits, name, "decode_attention v_bits")
     out_name = _name(out_fmt) if out_fmt is not None else None
-    if _USE_KERNELS and _kernel_fmt_ok(name) and (
-        out_name is None or _kernel_fmt_ok(out_name)
-    ):
-        return takum_decode_attention(
-            q, k_bits, v_bits, name, decode_impl=decode_impl,
-            out_fmt=out_name, encode_impl=encode_impl, **kw
-        )
-    if out_fmt is not None:
-        return ref.fused_decode_attention_ref(q, k_bits, v_bits, name, out_name)
-    return ref.decode_attention_ref(q, k_bits, v_bits, name)
+
+    def call():
+        if _USE_KERNELS and _kernel_fmt_ok(name) and (
+            out_name is None or _kernel_fmt_ok(out_name)
+        ):
+            return takum_decode_attention(
+                q, k_bits, v_bits, name, decode_impl=decode_impl,
+                out_fmt=out_name, encode_impl=encode_impl, **kw
+            )
+        if out_fmt is not None:
+            return ref.fused_decode_attention_ref(
+                q, k_bits, v_bits, name, out_name
+            )
+        return ref.decode_attention_ref(q, k_bits, v_bits, name)
+
+    return _observed(
+        "decode_attention", name, call, k_bits, v_bits,
+        out_is_wire=out_name is not None,
+    )

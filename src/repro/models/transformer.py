@@ -370,6 +370,9 @@ def _encode_cache(cfg, x):
     if telemetry.enabled():
         telemetry.emit(f"kv.appends.{wf.name}", jnp.float32(1))
         telemetry.emit(f"kv.specials.{wf.name}", count_specials(bits, wf.name))
+        telemetry.emit(
+            f"kv.bytes.{wf.name}", float(bits.size * bits.dtype.itemsize)
+        )
     return bits
 
 

@@ -16,6 +16,8 @@ from typing import Any, Callable, Optional
 import jax
 import numpy as np
 
+from repro.core import telemetry
+
 from .checkpoint import CheckpointManager
 
 log = logging.getLogger("repro.train")
@@ -114,8 +116,19 @@ class TrainLoop:
                 self.failure_hook(step)
             t0 = time.monotonic()
             batch = self.batch_fn(step)
-            state, metrics = self.step_fn(state, batch)
+            with telemetry.host_span("loop.step", cat="step", step=step):
+                state, metrics = self.step_fn(state, batch)
             dt = time.monotonic() - t0
+            if telemetry.enabled():
+                # host-side throughput: wall clock per driver step, plus
+                # tok/s when the batch carries a tokens array
+                telemetry.record("loop.steps", 1.0)
+                telemetry.record_hist("loop.dt_s", dt)
+                tok = batch.get("tokens") if hasattr(batch, "get") else None
+                if tok is not None and dt > 0:
+                    telemetry.record_gauge(
+                        "loop.tok_s", float(np.size(tok)) / dt
+                    )
             if self.cfg.step_timeout_s and dt > self.cfg.step_timeout_s:
                 log.warning("step %d exceeded watchdog (%.2fs > %.2fs): straggler suspected",
                             step, dt, self.cfg.step_timeout_s)

@@ -1,7 +1,9 @@
 """benchmarks.compare: the perf-trajectory regression gate's core logic.
 
 Pure-dict tests (no jax): identity matching across artifact sizes, the
->threshold throughput gate for full-vs-full, and the smoke exemption.
+CI-overlap minimum-effect-size throughput gate for full-vs-full (v6
+``stats`` blocks), the smoke exemption, the schema-reset rule, and the
+machine-readable verdict record.
 """
 
 import sys
@@ -12,51 +14,122 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 from benchmarks.compare import compare  # noqa: E402
 
 
-def _report(smoke=False, enc_melem=1000.0, fmts=("t8", "t16"), elems=1 << 20,
-            schema="bench_kernels/v4"):
+def _stats(median, half_width):
+    return {"median": median, "ci_lo": median - half_width,
+            "ci_hi": median + half_width, "reps": 11}
+
+
+def _report(smoke=False, enc_melem=1000.0, enc_ci=50.0, fmts=("t8", "t16"),
+            elems=1 << 20, schema="bench_kernels/v6"):
     return {
         "schema": schema,
         "smoke": smoke,
         "encode": [
             {"op": "encode", "fmt": f, "impl": "lut", "elems": elems,
-             "melem_s": enc_melem}
+             "melem_s": enc_melem, "stats": _stats(enc_melem, enc_ci)}
             for f in fmts
         ],
         "train_step": [
             {"op": "train_step", "policy": "takum", "arch": "a", "B": 8,
-             "tokens_s": 27000.0}
+             "tokens_s": 27000.0, "stats": _stats(27000.0, 900.0)}
         ],
     }
 
 
 def test_identical_reports_pass():
-    assert compare(_report(), _report(), 0.2) == []
+    fails, verdict = compare(_report(), _report())
+    assert fails == []
+    assert verdict["status"] == "pass"
+    # every matched row got a throughput verdict in the machine record
+    assert sum(1 for e in verdict["events"] if e.get("status") == "ok") == 3
 
 
-def test_regression_beyond_threshold_fails():
-    fails = compare(_report(), _report(enc_melem=700.0), 0.2)
+def test_disjoint_ci_regression_fails():
+    # candidate CIs [630, 770] vs baseline [950, 1050]: disjoint, and the
+    # 0.7x median ratio clears the minimum effect size -> regression
+    fails, verdict = compare(_report(), _report(enc_melem=700.0, enc_ci=70.0))
     assert len(fails) == 2 and all("regression" in f for f in fails)
+    assert verdict["status"] == "fail"
+    assert sum(
+        1 for e in verdict["events"] if e.get("status") == "regression"
+    ) == 2
 
 
-def test_regression_within_threshold_passes():
-    assert compare(_report(), _report(enc_melem=850.0), 0.2) == []
+def test_within_noise_delta_passes():
+    # 15% slower point estimate, but the wide CIs overlap: within noise —
+    # this is exactly the same-code rerun spread the old 20% point-ratio
+    # gate flaked on
+    fails, verdict = compare(_report(), _report(enc_melem=850.0, enc_ci=200.0))
+    assert fails == []
+    for e in verdict["events"]:
+        assert e["status"] == "ok" and not e["separated"]
+
+
+def test_separated_but_small_effect_passes():
+    # CIs disjoint (consistent measurement) but the median delta is under
+    # the 10% minimum effect: reported as separated, never a failure
+    fails, verdict = compare(_report(enc_ci=10.0), _report(enc_melem=950.0, enc_ci=10.0))
+    assert fails == []
+    enc = [e for e in verdict["events"] if "encode" in e["id"]]
+    assert all(e["status"] == "ok" and e["separated"] for e in enc)
+
+
+def test_improvement_is_recorded_not_failed():
+    fails, verdict = compare(_report(), _report(enc_melem=2000.0))
+    assert fails == []
+    assert any(e["status"] == "improvement" for e in verdict["events"])
+
+
+def test_rows_without_stats_degrade_to_point_ratio():
+    old_style = _report()
+    for row in old_style["encode"]:
+        del row["stats"]
+    new_style = _report(enc_melem=700.0)
+    for row in new_style["encode"]:
+        del row["stats"]
+    fails, _ = compare(old_style, new_style)
+    assert len(fails) == 2 and all("regression" in f for f in fails)
+    # point CIs: a sub-effect-size delta still passes
+    ok = _report(enc_melem=950.0)
+    for row in ok["encode"]:
+        del row["stats"]
+    base = _report()
+    for row in base["encode"]:
+        del row["stats"]
+    assert compare(base, ok)[0] == []
 
 
 def test_smoke_candidate_skips_throughput_but_checks_coverage():
     # 10x slower but smoke: exempt from the wall-clock gate
-    assert compare(_report(), _report(smoke=True, enc_melem=100.0), 0.2) == []
+    fails, verdict = compare(_report(), _report(smoke=True, enc_melem=100.0))
+    assert fails == [] and verdict["mode"] == "coverage-only (smoke)"
     # a dropped format identity still fails, smoke or not
-    fails = compare(_report(), _report(smoke=True, fmts=("t8",)), 0.2)
+    fails, verdict = compare(_report(), _report(smoke=True, fmts=("t8",)))
     assert len(fails) == 1 and "missing" in fails[0] and "t16" in fails[0]
+    assert any(e.get("status") == "missing" for e in verdict["events"])
 
 
 def test_size_fields_do_not_split_identities():
-    # smoke shrinks elems/shapes; the identity must still match
-    assert compare(_report(), _report(smoke=True, elems=1 << 16), 0.2) == []
+    # smoke shrinks elems/shapes; the coverage identity must still match
+    fails, _ = compare(_report(), _report(smoke=True, elems=1 << 16))
+    assert fails == []
+
+
+def test_size_fields_do_split_throughput_rows():
+    # full-vs-full with a changed size: the sized row pair no longer
+    # matches, so no (meaningless) cross-size throughput verdict is issued
+    fails, verdict = compare(_report(), _report(elems=1 << 16, enc_melem=100.0))
+    assert fails == []
+    enc_verdicts = [e for e in verdict["events"] if "encode" in e.get("id", "")
+                    and "ratio" in e]
+    assert enc_verdicts == []
 
 
 def test_schema_bump_resets_the_trajectory():
     # a deliberate schema change restructures row identities: no gate —
     # neither the 10x slowdown nor the dropped rows fail across the bump
-    old = _report(schema="bench_kernels/v3", fmts=("t8",), enc_melem=10_000.0)
-    assert compare(old, _report(), 0.2) == []
+    old = _report(schema="bench_kernels/v5", fmts=("t8",), enc_melem=10_000.0)
+    fails, verdict = compare(old, _report())
+    assert fails == []
+    assert verdict["status"] == "schema_reset"
+    assert verdict["events"][0]["status"] == "schema_reset"
